@@ -1,0 +1,46 @@
+"""Shared benchmark plumbing: CSV emit + engine helpers."""
+from __future__ import annotations
+
+import sys
+import time
+from typing import Iterable
+
+import jax
+
+from repro.core import transform
+from repro.data import scenes
+from repro.serving import engine as engine_lib
+
+ROWS = []
+
+
+def emit(name: str, value, derived: str = ""):
+    """Benchmark output contract: ``name,us_per_call,derived`` CSV."""
+    ROWS.append((name, value, derived))
+    print(f"{name},{value},{derived}", flush=True)
+
+
+def timed(fn, *args, warmup: int = 1, iters: int = 5):
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters, out
+
+
+def small_scene(seed: int = 0, n_points: int = 8192, max_obj: int = 12
+                ) -> scenes.SceneConfig:
+    """KITTI-like point density (the paper's environment), reduced frame
+    point count for CPU benchmark speed."""
+    return scenes.SceneConfig(max_obj=max_obj, n_points=n_points,
+                              mean_objects=6, seed=seed,
+                              density_scale=15000.0)
+
+
+def make_engine(detector: str, trace: str, mode: str, seed: int = 0,
+                **kw) -> engine_lib.MobyEngine:
+    return engine_lib.MobyEngine(small_scene(seed), detector, trace=trace,
+                                 mode=mode, seed=seed, **kw)

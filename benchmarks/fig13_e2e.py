@@ -1,0 +1,50 @@
+"""Fig. 13 — Moby vs Edge-Only vs Cloud-Only: end-to-end latency (a-d) and
+accuracy (e), across the four detectors and four bandwidth traces.
+
+Paper anchors: 56.0-91.9 % latency reduction; lowest Moby latency 99 ms
+(PointPillar, Belgium-2) ~ 10 FPS; accuracy within 0.056 F1 of the 3D
+detectors (PointRCNN slightly better: 0.760 vs 0.751)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, make_engine
+
+MODELS = ["pointpillar", "second", "pointrcnn", "pv_rcnn"]
+TRACES = ["fcc1", "belgium2"]
+FRAMES = 40
+
+
+def run():
+    reductions = []
+    for model in MODELS:
+        for trace in TRACES:
+            eo = make_engine(model, trace, "edge_only", seed=3).run(FRAMES)
+            co = make_engine(model, trace, "cloud_only", seed=3).run(FRAMES)
+            mb = make_engine(model, trace, "moby", seed=3).run(FRAMES)
+            emit(f"fig13/{model}/{trace}/edge_only_ms",
+                 round(eo.mean_latency * 1e3, 1))
+            emit(f"fig13/{model}/{trace}/cloud_only_ms",
+                 round(co.mean_latency * 1e3, 1))
+            best_base = min(eo.mean_latency, co.mean_latency)
+            red = 1 - mb.mean_latency / best_base
+            reductions.append(red)
+            note = "paper=99ms@10FPS" if (model, trace) == \
+                ("pointpillar", "belgium2") else ""
+            emit(f"fig13/{model}/{trace}/moby_ms",
+                 round(mb.mean_latency * 1e3, 1), note)
+            emit(f"fig13/{model}/{trace}/latency_reduction",
+                 round(red, 3), "paper=0.56-0.919")
+            if trace == "belgium2":
+                emit(f"fig13/{model}/accuracy_baseline",
+                     round(eo.mean_f1, 3))
+                emit(f"fig13/{model}/accuracy_moby", round(mb.mean_f1, 3),
+                     "paper delta <= 0.056")
+    emit("fig13/latency_reduction_min", round(min(reductions), 3),
+         "paper>=0.56")
+    emit("fig13/latency_reduction_max", round(max(reductions), 3),
+         "paper<=0.919")
+
+
+if __name__ == "__main__":
+    run()

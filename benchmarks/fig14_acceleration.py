@@ -1,0 +1,37 @@
+"""Fig. 14 — Moby vs alternative acceleration methods (Complex-YOLO,
+Frustum-ConvNet, Monodle), all fully on-board (no cloud offload).
+
+Paper anchors: -64.0 % latency vs Complex-YOLO, -77.6 % vs Monodle with
++5.5 % accuracy; Deep3DBox (2834 ms) / Pseudo-LiDAR++ (5889 ms) are too
+slow for the edge."""
+from __future__ import annotations
+
+from benchmarks.common import emit, make_engine
+from repro.runtime import costmodel
+
+BASELINES = ["complex_yolo", "frustum_convnet", "monodle"]
+FRAMES = 40
+
+
+def run():
+    for base in BASELINES:
+        eo = make_engine(base, "belgium2", "edge_only", seed=7).run(FRAMES)
+        mb = make_engine(base, "belgium2", "moby_onboard", seed=7).run(FRAMES)
+        emit(f"fig14/{base}/baseline_ms", round(eo.mean_latency * 1e3, 1))
+        emit(f"fig14/{base}/moby_ms", round(mb.mean_latency * 1e3, 1))
+        red = 1 - mb.mean_latency / eo.mean_latency
+        anchor = {"complex_yolo": "paper=0.64",
+                  "monodle": "paper=0.776"}.get(base, "")
+        emit(f"fig14/{base}/latency_reduction", round(red, 3), anchor)
+        emit(f"fig14/{base}/baseline_f1", round(eo.mean_f1, 3))
+        emit(f"fig14/{base}/moby_f1", round(mb.mean_f1, 3),
+             "paper: +5.5% vs monodle" if base == "monodle" else "")
+    for slow in ("deep3dbox", "pseudo_lidar_pp"):
+        lat = costmodel.detector_latency(slow, costmodel.JETSON_TX2)
+        anchor = {"deep3dbox": "paper=2834ms",
+                  "pseudo_lidar_pp": "paper=5889ms"}[slow]
+        emit(f"fig14/{slow}/edge_ms", round(lat * 1e3, 0), anchor)
+
+
+if __name__ == "__main__":
+    run()

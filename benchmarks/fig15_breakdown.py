@@ -1,0 +1,69 @@
+"""Fig. 15 — execution time of Moby's key steps.
+
+Two columns: (a) the paper-calibrated TX2 component model used by the
+engine, and (b) *measured* wall times of our jitted JAX implementations on
+this host (averaged over runs, as the paper averages over 300).
+
+Paper anchors: instance segmentation 43.9 % of on-board latency, 3D bbox
+estimation 30.1 %, point projection 16.6 %, TBA 5.14 ms, filtration
+2.01 ms, FOS 0.60 ms."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, small_scene, timed
+from repro.core import (association, filtration, projection, ransac,
+                        scheduler, tracking, transform)
+from repro.data import scenes
+from repro.serving.engine import ComponentTimes
+
+
+def run():
+    comp = ComponentTimes()
+    onboard = comp.seg_2d + comp.point_proj + comp.filtration + \
+        comp.bbox_est_assoc + comp.tba + comp.fos
+    for name, val in [("seg_2d", comp.seg_2d),
+                      ("point_proj", comp.point_proj),
+                      ("filtration", comp.filtration),
+                      ("bbox_est", comp.bbox_est_assoc),
+                      ("tba", comp.tba), ("fos", comp.fos)]:
+        emit(f"fig15/tx2_model/{name}_ms", round(val * 1e3, 2),
+             f"{100 * val / onboard:.1f}% of onboard")
+
+    # Measured host wall times of the real implementations.
+    cfg = small_scene(seed=2)
+    stream = scenes.SceneStream(cfg, seed=2)
+    frame = next(stream.frames(1))
+    calib = projection.Calibration(tr=jnp.asarray(stream.tr),
+                                   p=jnp.asarray(stream.p),
+                                   height=cfg.img_h, width=cfg.img_w)
+    pts = jnp.asarray(frame.points)
+
+    proj = jax.jit(lambda p: projection.label_points(
+        *projection.project_points(p, calib)[::2],
+        jnp.asarray(frame.label_img)))
+    t_proj, labels = timed(proj, pts)
+
+    clusters, cvalid, _ = projection.build_clusters(pts, labels, cfg.max_obj,
+                                                    256)
+    filt = jax.jit(filtration.filter_clusters)
+    t_filt, keep = timed(filt, clusters, cvalid)
+
+    rans = jax.jit(lambda k, c, v: ransac.ransac_planes(k, c, v))
+    t_rans, fit = timed(rans, jax.random.key(0), clusters, keep)
+
+    assoc = jax.jit(association.associate)
+    boxes2d = jnp.asarray(frame.gt_boxes2d)
+    t_assoc, _ = timed(assoc, boxes2d, jnp.asarray(frame.gt_valid), boxes2d,
+                       jnp.asarray(frame.gt_valid))
+
+    emit("fig15/measured_host/point_proj_ms", round(t_proj * 1e3, 2))
+    emit("fig15/measured_host/filtration_ms", round(t_filt * 1e3, 2))
+    emit("fig15/measured_host/ransac_ms", round(t_rans * 1e3, 2))
+    emit("fig15/measured_host/association_ms", round(t_assoc * 1e3, 2))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,55 @@
+"""Fig. 17 — system efficiency: power and memory (documented proxies).
+
+No Tegrastats in this container (DESIGN.md §3): power is modeled as a GPU
+duty-cycle proxy (TDP x active fraction per 100 ms frame budget) and
+memory as runtime base + model weights + activations. Paper anchors: Moby
+power = 24.2 % of PointPillar, -73 % average; memory -17.3..-48.1 %."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.runtime import costmodel
+
+TX2_GPU_TDP_W = 12.0
+TX2_BASE_W = 2.5
+RUNTIME_BASE_MB = 1200.0  # CUDA/cuDNN context + buffers on TX2
+
+# Model weight + activation footprints (MB), from the public checkpoints.
+MODEL_MB = {
+    "pointpillar": 2100.0,
+    "second": 2600.0,
+    "pointrcnn": 2400.0,
+    "pv_rcnn": 3400.0,
+    "yolov5n": 450.0,
+}
+
+
+def _power(model: str, frame_budget_s: float = 0.1) -> float:
+    duty = min(costmodel.detector_latency(model, costmodel.JETSON_TX2)
+               / frame_budget_s, 1.0)
+    return TX2_BASE_W + TX2_GPU_TDP_W * duty
+
+
+def run():
+    moby_power = TX2_BASE_W + TX2_GPU_TDP_W * min(0.033 / 0.1, 1.0) + 0.4
+    savings = []
+    for m in ("pointpillar", "second", "pointrcnn", "pv_rcnn"):
+        p = _power(m)
+        emit(f"fig17/power/{m}_w", round(p, 1))
+        savings.append(1 - moby_power / p)
+    emit("fig17/power/moby_w", round(moby_power, 1))
+    emit("fig17/power/moby_over_pointpillar",
+         round(moby_power / _power("pointpillar"), 3), "paper=0.242")
+    emit("fig17/power/mean_savings", round(sum(savings) / len(savings), 3),
+         "paper~0.73")
+
+    moby_mem = RUNTIME_BASE_MB + MODEL_MB["yolov5n"]
+    for m in ("pointpillar", "second", "pointrcnn", "pv_rcnn"):
+        mem = RUNTIME_BASE_MB + MODEL_MB[m]
+        emit(f"fig17/memory/{m}_mb", round(mem, 0))
+        emit(f"fig17/memory/moby_reduction_vs_{m}",
+             round(1 - moby_mem / mem, 3), "paper=0.173-0.481")
+    emit("fig17/memory/moby_mb", round(moby_mem, 0))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,52 @@
+"""Fig. 3 + Table 2 — cloud-only inference over four 4G/LTE traces.
+
+End-to-end = upload (trace-driven netsim, raw KITTI-scale frame) + server
+inference (RTX 2080Ti profile) + result return. Paper anchor: Belgium-2
+mean across the four models ~391 ms; FCC-1 ~2x Belgium-2."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.runtime import costmodel, netsim
+from repro.serving.engine import PC_BYTES, RESULT_BYTES
+
+MODELS = ["pointpillar", "second", "pointrcnn", "pv_rcnn"]
+TRACES = ["fcc1", "fcc2", "belgium1", "belgium2"]
+
+
+def run():
+    per_trace = {}
+    for trace in TRACES:
+        net = netsim.NetworkSim(trace, seed=0)
+        lats = []
+        for m in MODELS:
+            samples = []
+            for i in range(20):
+                net.t = i * 2.0
+                tx = net.transfer_time(PC_BYTES)
+                infer = costmodel.detector_latency(m, costmodel.RTX_2080TI)
+                back = net.transfer_time(RESULT_BYTES, start_t=net.t + tx
+                                         + infer)
+                samples.append(tx + infer + back)
+            lat = float(np.mean(samples))
+            lats.append(lat)
+            emit(f"fig3/cloud_only/{trace}/{m}_ms", round(lat * 1e3, 1))
+        per_trace[trace] = float(np.mean(lats))
+        emit(f"fig3/cloud_only/{trace}/mean_ms",
+             round(per_trace[trace] * 1e3, 1),
+             "paper=391ms" if trace == "belgium2" else "")
+    emit("fig3/fcc1_over_belgium2",
+         round(per_trace["fcc1"] / per_trace["belgium2"], 2),
+         "paper~2x")
+    # Table 2 — synthesized trace statistics vs the paper's.
+    for trace in TRACES:
+        v = netsim.validate_trace(trace)
+        emit(f"table2/{trace}/mean_mbps", round(v["got"]["mean"], 2),
+             f"paper={v['want']['mean']}")
+        emit(f"table2/{trace}/median_mbps", round(v["got"]["median"], 2),
+             f"paper={v['want']['median']}")
+
+
+if __name__ == "__main__":
+    run()

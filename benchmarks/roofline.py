@@ -1,0 +1,69 @@
+"""§Roofline — the 3-term roofline table for every dry-run cell.
+
+Reads results/dryrun_baseline.jsonl (produced by repro.launch.dryrun) and
+emits, per (arch x shape x mesh): compute/memory/collective seconds, the
+dominant term, MODEL_FLOPS/HLO_FLOPS, and per-device memory. Also renders
+the markdown table consumed by EXPERIMENTS.md."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+
+BASELINE = os.path.join(os.path.dirname(__file__), "..", "results",
+                        "dryrun_baseline.jsonl")
+
+
+def load(path: str = BASELINE):
+    recs = []
+    if not os.path.exists(path):
+        return recs
+    with open(path) as f:
+        for line in f:
+            recs.append(json.loads(line))
+    return recs
+
+
+def markdown_table(recs, mesh: str = "16x16") -> str:
+    rows = ["| arch | shape | compute_s | memory_s | collective_s | "
+            "dominant | MODEL/HLO flops | mem/chip (GB) |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["mesh"] != mesh or r["status"] != "ok":
+            continue
+        mem_gb = (r.get("argument_size_in_bytes", 0) +
+                  r.get("temp_size_in_bytes", 0) -
+                  r.get("alias_size_in_bytes", 0)) / 1e9
+        ratio = r.get("useful_flops_ratio")
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.2e} | "
+            f"{r['memory_s']:.2e} | {r['collective_s']:.2e} | "
+            f"{r['dominant']} | "
+            f"{ratio:.2f} | {mem_gb:.1f} |" if ratio is not None else
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.2e} | "
+            f"{r['memory_s']:.2e} | {r['collective_s']:.2e} | "
+            f"{r['dominant']} | n/a | {mem_gb:.1f} |")
+    return "\n".join(rows)
+
+
+def run():
+    recs = load()
+    if not recs:
+        emit("roofline/status", "missing",
+             "run: python -m repro.launch.dryrun --all")
+        return
+    ok = [r for r in recs if r["status"] == "ok"]
+    emit("roofline/cells_ok", len(ok), f"of {len(recs)}")
+    for r in ok:
+        key = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        emit(f"{key}/dominant", r["dominant"],
+             f"c={r['compute_s']:.2e}s m={r['memory_s']:.2e}s "
+             f"x={r['collective_s']:.2e}s")
+        if r.get("useful_flops_ratio") is not None:
+            emit(f"{key}/model_over_hlo_flops",
+                 round(r["useful_flops_ratio"], 3))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,38 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+Prints ``name,value,derived`` CSV rows (see benchmarks/common.emit).
+Usage: PYTHONPATH=src python -m benchmarks.run [module ...]
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+MODULES = [
+    "fig2_edge_only",
+    "fig3_cloud_only",
+    "table3_compression",
+    "fig13_e2e",
+    "fig14_acceleration",
+    "table4_ablation",
+    "fig15_breakdown",
+    "fig16_sensitivity",
+    "fig17_efficiency",
+    "roofline",
+]
+
+
+def main() -> None:
+    import importlib
+    wanted = sys.argv[1:] or MODULES
+    print("name,value,derived")
+    for name in wanted:
+        mod = importlib.import_module(f"benchmarks.{name}")
+        t0 = time.time()
+        mod.run()
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+
+
+if __name__ == '__main__':
+    main()

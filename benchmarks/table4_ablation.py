@@ -1,0 +1,35 @@
+"""Table 4 — component ablation: TRS, TRS+FOS, TRS+FOS+TBA.
+
+Paper anchors: accuracy 0.762 -> 0.787 -> 0.814; on-board latency
+88.44 -> 89.45 -> 76.29 ms (TBA makes estimation cheaper via priors)."""
+from __future__ import annotations
+
+from benchmarks.common import emit, make_engine
+
+FRAMES = 40
+_PAPER = {
+    "trs": (0.762, 88.44),
+    "trs_fos": (0.787, 89.45),
+    "trs_fos_tba": (0.814, 76.29),
+}
+
+
+def run():
+    variants = {
+        "trs": dict(use_fos=False, use_tba=False),
+        "trs_fos": dict(use_fos=True, use_tba=False),
+        "trs_fos_tba": dict(use_fos=True, use_tba=True),
+    }
+    for name, kw in variants.items():
+        res = make_engine("pointpillar", "belgium2", "moby", seed=11,
+                          **kw).run(FRAMES)
+        pf1, plat = _PAPER[name]
+        emit(f"table4/{name}/accuracy", round(res.mean_f1, 3),
+             f"paper={pf1}")
+        emit(f"table4/{name}/latency_ms", round(res.mean_latency * 1e3, 1))
+        emit(f"table4/{name}/onboard_ms", round(res.mean_onboard * 1e3, 1),
+             f"paper={plat}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,58 @@
+"""Architecture registry: one module per assigned architecture.
+
+``get(name)`` returns the full ArchConfig; ``get_smoke(name)`` returns the
+reduced same-family config used by CPU smoke tests. ``SHAPES`` is the
+assigned input-shape set shared by all LM-family archs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict
+
+from repro.models.config import ArchConfig
+
+ARCH_IDS = [
+    "whisper_small",
+    "qwen2_vl_2b",
+    "deepseek_v2_236b",
+    "moonshot_v1_16b_a3b",
+    "glm4_9b",
+    "qwen2_5_3b",
+    "minitron_4b",
+    "granite_20b",
+    "xlstm_350m",
+    "zamba2_1_2b",
+]
+
+# Assigned input shapes (seq_len, global_batch, kind).
+SHAPES = {
+    "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, kind="decode"),
+}
+
+# long_500k needs sub-quadratic attention: only SSM/hybrid archs run it
+# (see DESIGN.md §Arch-applicability). MLA is still full attention.
+LONG_CONTEXT_ARCHS = {"xlstm_350m", "zamba2_1_2b"}
+
+
+def shape_supported(arch: str, shape: str) -> bool:
+    if shape == "long_500k":
+        return arch in LONG_CONTEXT_ARCHS
+    return True
+
+
+def get(name: str) -> ArchConfig:
+    mod = importlib.import_module(f"repro.configs.{name}")
+    return mod.CONFIG
+
+
+def get_smoke(name: str) -> ArchConfig:
+    mod = importlib.import_module(f"repro.configs.{name}")
+    return mod.SMOKE
+
+
+def all_configs() -> Dict[str, ArchConfig]:
+    return {n: get(n) for n in ARCH_IDS}

@@ -1,0 +1,47 @@
+"""zamba2-1.2b [hybrid]: 38L d_model=2048 32H (kv=32) d_ff=8192 vocab=32000,
+ssm_state=64.
+
+Mamba2 backbone with a *shared* full-attention block applied every 6 mamba
+layers (6 invocations + 2 tail mamba layers). The shared block reuses one
+parameter set across invocations (zamba2's signature trick); per-invocation
+LoRA deltas are omitted (DESIGN.md). [arXiv:2411.15242]
+"""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="zamba2_1_2b",
+    family="hybrid",
+    n_layers=38,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=64,
+    d_ff=8192,
+    vocab=32000,
+    ssm_kind="mamba2",
+    ssm_state=64,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_conv=4,
+    hybrid_attn_every=6,
+    rope_theta=10000.0,
+)
+
+SMOKE = ArchConfig(
+    name="zamba2_1_2b_smoke",
+    family="hybrid",
+    n_layers=5,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=16,
+    d_ff=128,
+    vocab=256,
+    ssm_kind="mamba2",
+    ssm_state=16,
+    ssm_expand=2,
+    ssm_head_dim=16,
+    ssm_conv=4,
+    hybrid_attn_every=2,
+    rope_theta=10000.0,
+)

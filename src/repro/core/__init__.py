@@ -1,0 +1,13 @@
+"""Moby core: the paper's 2D->3D transformation + offloading scheduler."""
+from repro.core import (  # noqa: F401
+    association,
+    box_estimation,
+    boxes,
+    filtration,
+    metrics,
+    projection,
+    ransac,
+    scheduler,
+    tracking,
+    transform,
+)

@@ -1,0 +1,65 @@
+"""Accuracy metrics (§5.1): F1 at a 3D-IoU threshold of 0.4.
+
+An object is successfully detected when the 3D IoU between a detection and
+a ground-truth box exceeds 40 %. Matching is greedy-by-IoU (standard for
+detection F1); precision/recall/F1 follow.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import boxes as box_ops
+
+
+def match_greedy(iou: jnp.ndarray, det_valid: jnp.ndarray,
+                 gt_valid: jnp.ndarray, thresh: float):
+    """Greedy one-to-one matching on an IoU matrix (D, G).
+
+    Returns (tp mask over detections, matched mask over gts).
+    """
+    d, g = iou.shape
+    iou = jnp.where(det_valid[:, None] & gt_valid[None, :], iou, 0.0)
+
+    def body(_, carry):
+        iou_cur, det_used, gt_used = carry
+        flat = jnp.argmax(iou_cur)
+        di, gi = flat // g, flat % g
+        best = iou_cur[di, gi]
+        take = best >= thresh
+        det_used = det_used.at[di].set(det_used[di] | take)
+        gt_used = gt_used.at[gi].set(gt_used[gi] | take)
+        iou_cur = iou_cur.at[di, :].set(jnp.where(take, 0.0, iou_cur[di, :]))
+        iou_cur = iou_cur.at[:, gi].set(jnp.where(take, 0.0, iou_cur[:, gi]))
+        return iou_cur, det_used, gt_used
+
+    n_iter = min(d, g)
+    _, det_used, gt_used = jax.lax.fori_loop(
+        0, n_iter, body,
+        (iou, jnp.zeros((d,), bool), jnp.zeros((g,), bool)))
+    return det_used, gt_used
+
+
+import functools
+
+
+@functools.partial(jax.jit, static_argnames=("iou_thresh",))
+def f1_score(det_boxes: jnp.ndarray, det_valid: jnp.ndarray,
+             gt_boxes: jnp.ndarray, gt_valid: jnp.ndarray,
+             iou_thresh: float = 0.4):
+    """Paper's accuracy metric. Returns (f1, precision, recall). Jitted
+    module-wide: the rotated-IoU matching is far too slow to trace eagerly
+    per frame."""
+    iou = box_ops.pairwise_iou_3d(det_boxes, gt_boxes)
+    tp_mask, _ = match_greedy(iou, det_valid, gt_valid, iou_thresh)
+    tp = jnp.sum(tp_mask)
+    n_det = jnp.sum(det_valid)
+    n_gt = jnp.sum(gt_valid)
+    precision = jnp.where(n_det > 0, tp / jnp.maximum(n_det, 1), 0.0)
+    recall = jnp.where(n_gt > 0, tp / jnp.maximum(n_gt, 1), 0.0)
+    f1 = jnp.where(precision + recall > 0,
+                   2 * precision * recall / jnp.maximum(precision + recall, 1e-9),
+                   0.0)
+    # Edge case: no GT and no detections = perfect frame.
+    empty = (n_gt == 0) & (n_det == 0)
+    return jnp.where(empty, 1.0, f1), precision, recall

@@ -1,0 +1,101 @@
+"""Point projection (§3.3): transfer 2D semantics onto the point cloud.
+
+The LiDAR frame is projected into the camera image with the fixed extrinsic
+``Tr`` (LiDAR -> camera) and projective ``P`` (camera -> pixel) calibration
+matrices (time-invariant, provided by the sensor rig as in KITTI). Each
+in-image point is labeled with the instance id of the segmentation mask it
+lands in ("squeezing the stacked masks along the channel dimension" — we
+keep the equivalent flattened instance-id image). Labeled points are then
+compacted into fixed-size per-object cluster buffers.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Calibration(NamedTuple):
+    tr: jnp.ndarray  # (3, 4) LiDAR -> camera rigid transform
+    p: jnp.ndarray   # (3, 4) camera projection matrix
+    height: int      # label image height
+    width: int       # label image width
+
+
+def project_points(points: jnp.ndarray, calib: Calibration):
+    """Project LiDAR points to pixel coordinates.
+
+    Args:
+      points: (N, 3) LiDAR-frame points.
+      calib: calibration.
+
+    Returns:
+      uv: (N, 2) float pixel coordinates.
+      depth: (N,) camera-frame depth.
+      visible: (N,) bool — in front of the camera and inside the image.
+    """
+    n = points.shape[0]
+    hom = jnp.concatenate([points, jnp.ones((n, 1), dtype=points.dtype)], axis=-1)
+    cam = hom @ calib.tr.T                                    # (N, 3)
+    cam_h = jnp.concatenate([cam, jnp.ones((n, 1), dtype=points.dtype)], axis=-1)
+    pix = cam_h @ calib.p.T                                   # (N, 3)
+    depth = pix[:, 2]
+    w = jnp.where(jnp.abs(depth) < 1e-6, 1e-6, depth)
+    uv = pix[:, :2] / w[:, None]
+    visible = (depth > 0.1) & (uv[:, 0] >= 0) & (uv[:, 0] < calib.width) \
+        & (uv[:, 1] >= 0) & (uv[:, 1] < calib.height)
+    return uv, depth, visible
+
+
+def label_points(uv: jnp.ndarray, visible: jnp.ndarray,
+                 label_img: jnp.ndarray) -> jnp.ndarray:
+    """Nearest-pixel instance lookup. label_img: (H, W) int32, 0=background.
+
+    Returns (N,) int32 labels, 0 for background/invisible points.
+    """
+    h, w = label_img.shape
+    ui = jnp.clip(jnp.round(uv[:, 0]).astype(jnp.int32), 0, w - 1)
+    vi = jnp.clip(jnp.round(uv[:, 1]).astype(jnp.int32), 0, h - 1)
+    lab = label_img[vi, ui]
+    return jnp.where(visible, lab, 0)
+
+
+def masks_to_label_image(masks: jnp.ndarray) -> jnp.ndarray:
+    """Squeeze stacked instance masks (O, H, W) bool into an id image (H, W).
+
+    Later (higher-index) masks win overlaps, matching a front-to-back
+    compositing where the 2D model outputs are ordered by confidence.
+    """
+    o = masks.shape[0]
+    ids = jnp.arange(1, o + 1, dtype=jnp.int32)[:, None, None]
+    stacked = jnp.where(masks, ids, 0)
+    return jnp.max(stacked, axis=0).astype(jnp.int32)
+
+
+def build_clusters(points: jnp.ndarray, labels: jnp.ndarray, max_obj: int,
+                   pts_per_obj: int):
+    """Compact labeled points into fixed per-object buffers.
+
+    Args:
+      points: (N, 3).
+      labels: (N,) int32 instance ids (0 = background).
+      max_obj: O, number of object slots.
+      pts_per_obj: P, buffer size per object.
+
+    Returns:
+      clusters: (O, P, 3) point buffers (zeros beyond valid).
+      valid: (O, P) bool masks.
+      counts: (O,) number of points per object (possibly > P before capping).
+    """
+    def one(obj_id):
+        m = labels == obj_id
+        order = jnp.argsort(~m)  # members first, stable
+        idx = order[:pts_per_obj]
+        v = m[idx]
+        pts = jnp.where(v[:, None], points[idx], 0.0)
+        return pts, v, jnp.sum(m)
+
+    obj_ids = jnp.arange(1, max_obj + 1, dtype=jnp.int32)
+    clusters, valid, counts = jax.vmap(one)(obj_ids)
+    return clusters, valid, counts

@@ -1,0 +1,108 @@
+"""Frame offloading scheduler (§3.4).
+
+Every ``N_T`` frames a *test frame* is offloaded to the cloud detector in
+parallel with on-device processing. When the cloud result returns, the
+transformation output buffered for that frame is scored against it (3D-IoU
+F1, the cloud result acting as ground truth). If the score drops below
+``Q_T``, the next frame becomes an *anchor frame*: processing blocks on the
+cloud 3D result, which then reseeds the transformation (and `recomputation`
+in the serving engine replays buffered intermediate outputs to hide the
+wait).
+
+The state machine itself is jit-compatible; the asynchronous transport
+(when test results arrive) is driven by the engine/netsim, which feeds
+``test_arrived`` + payloads into :func:`scheduler_step`.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core import metrics
+
+
+class SchedulerParams(NamedTuple):
+    n_t: int = 4          # test-frame period (paper §4)
+    q_t: float = 0.7      # accuracy threshold (paper §4)
+    iou_thresh: float = 0.4
+
+
+class SchedulerState(NamedTuple):
+    frames_since_test: jnp.ndarray   # int32
+    test_inflight: jnp.ndarray       # bool
+    buf_boxes: jnp.ndarray           # (D, 7) our output on the test frame
+    buf_valid: jnp.ndarray           # (D,)
+    anchor_pending: jnp.ndarray      # bool: next frame must be an anchor
+    last_error: jnp.ndarray          # float: 1 - F1 of last test comparison
+    tests_sent: jnp.ndarray          # int32 counters (diagnostics)
+    anchors_triggered: jnp.ndarray
+
+
+class SchedulerActions(NamedTuple):
+    send_test: jnp.ndarray       # bool: offload this frame as a test frame
+    run_as_anchor: jnp.ndarray   # bool: this frame is an anchor frame
+
+
+def init_scheduler(max_obj: int) -> SchedulerState:
+    return SchedulerState(
+        frames_since_test=jnp.int32(0),
+        test_inflight=jnp.bool_(False),
+        buf_boxes=jnp.zeros((max_obj, 7), jnp.float32),
+        buf_valid=jnp.zeros((max_obj,), bool),
+        anchor_pending=jnp.bool_(True),   # frame 0 is always an anchor
+        last_error=jnp.float32(0.0),
+        tests_sent=jnp.int32(0),
+        anchors_triggered=jnp.int32(0),
+    )
+
+
+def scheduler_pre(state: SchedulerState,
+                  params: SchedulerParams = SchedulerParams()) -> SchedulerActions:
+    """Decide this frame's treatment before processing it."""
+    run_as_anchor = state.anchor_pending
+    due = state.frames_since_test >= params.n_t - 1
+    send_test = (~run_as_anchor) & due & (~state.test_inflight)
+    return SchedulerActions(send_test=send_test, run_as_anchor=run_as_anchor)
+
+
+def scheduler_post(state: SchedulerState, actions: SchedulerActions,
+                   out_boxes: jnp.ndarray, out_valid: jnp.ndarray,
+                   test_arrived: jnp.ndarray, test_boxes: jnp.ndarray,
+                   test_valid: jnp.ndarray,
+                   params: SchedulerParams = SchedulerParams()) -> SchedulerState:
+    """Advance the state machine after processing a frame.
+
+    Args:
+      out_boxes/out_valid: this frame's transformation output (buffered when
+        this frame was sent as a test frame).
+      test_arrived: bool — the cloud result for the in-flight test frame
+        arrived during this frame.
+      test_boxes/test_valid: the cloud 3D detections for that test frame.
+    """
+    # Buffer our own output when this frame is offloaded as a test.
+    buf_boxes = jnp.where(actions.send_test, out_boxes, state.buf_boxes)
+    buf_valid = jnp.where(actions.send_test, out_valid, state.buf_valid)
+
+    # Score the returned test frame against our buffered output.
+    f1, _, _ = metrics.f1_score(buf_boxes, buf_valid, test_boxes, test_valid,
+                                params.iou_thresh)
+    got = state.test_inflight & test_arrived
+    error = jnp.where(got, 1.0 - f1, state.last_error)
+    bad = got & (f1 < params.q_t)
+
+    anchor_pending = jnp.where(actions.run_as_anchor, False,
+                               state.anchor_pending) | bad
+    test_inflight = (state.test_inflight & ~test_arrived) | actions.send_test
+    frames_since_test = jnp.where(actions.send_test | actions.run_as_anchor,
+                                  0, state.frames_since_test + 1)
+    return SchedulerState(
+        frames_since_test=frames_since_test,
+        test_inflight=test_inflight,
+        buf_boxes=buf_boxes,
+        buf_valid=buf_valid,
+        anchor_pending=anchor_pending,
+        last_error=error,
+        tests_sent=state.tests_sent + actions.send_test.astype(jnp.int32),
+        anchors_triggered=state.anchors_triggered + bad.astype(jnp.int32),
+    )

@@ -1,0 +1,144 @@
+"""The full per-frame 2D->3D transformation pipeline (§3.1 workflow).
+
+Two entry points, both jit-compatible and batchable over streams:
+
+* :func:`anchor_step` — "Preparation": ingest cloud 3D detections for an
+  anchor frame, project them to 2D to (re)seed the tracker, and refresh the
+  fleet-average object size.
+* :func:`transform_step` — "Transformation": run tracking-based association
+  on the current 2D detections, project the point cloud into the masks,
+  filter each cluster (Algorithm 1), RANSAC the visible surface and estimate
+  3D boxes (Eqs. 1-2), then write results back onto the tracks for the next
+  frame.
+
+The 2D detector itself (instance segmentation) is *not* called here — its
+outputs (boxes + instance-id label image) are inputs, so oracle detectors,
+the YOLO-lite JAX net, or recorded outputs can all drive the same pipeline.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import association, box_estimation, boxes as box_ops
+from repro.core import filtration, projection, ransac, tracking
+
+
+class TransformParams(NamedTuple):
+    filtration: filtration.FiltrationParams = filtration.FiltrationParams()
+    ransac: ransac.RansacParams = ransac.RansacParams()
+    boxest: box_estimation.BoxEstParams = box_estimation.BoxEstParams()
+    tracker: tracking.TrackerParams = tracking.TrackerParams()
+    iou_assoc: float = 0.3        # association criterion (paper: 0.3)
+    pts_per_obj: int = 256        # cluster buffer size
+    use_tba: bool = True          # tracking-based association on/off (Table 4)
+    ransac_score_fn: object = None  # optional Pallas-backed scorer
+
+
+class MobyState(NamedTuple):
+    tracks: tracking.TrackState
+    avg_size: jnp.ndarray        # (3,) running average object size (l, w, h)
+    key: jax.Array
+
+
+def init_state(max_tracks: int, key: jax.Array,
+               avg_size=(4.0, 1.7, 1.6)) -> MobyState:
+    """Default avg size ~ KITTI car mean (l, w, h)."""
+    return MobyState(tracks=tracking.init_tracks(max_tracks),
+                     avg_size=jnp.asarray(avg_size, jnp.float32), key=key)
+
+
+class FrameOutput(NamedTuple):
+    boxes3d: jnp.ndarray         # (D, 7)
+    valid: jnp.ndarray           # (D,)
+    det_to_track: jnp.ndarray    # (D,)
+    track_boxes2d: jnp.ndarray   # (T, 4) predicted boxes (diagnostics)
+
+
+def anchor_step(state: MobyState, boxes3d: jnp.ndarray, valid: jnp.ndarray,
+                calib: projection.Calibration,
+                params: TransformParams = TransformParams()) -> tuple[MobyState, FrameOutput]:
+    """Ingest cloud 3D detections at an anchor frame (steps 1-2 in Fig. 4)."""
+    boxes2d = jax.vmap(lambda b: box_ops.project_box3d_to_2d(
+        b, calib.tr, calib.p))(boxes3d)
+    tracks, pred2d = tracking.predict(state.tracks)
+    t2d, d2t, _ = association.associate(pred2d, tracks.active, boxes2d, valid,
+                                        params.iou_assoc)
+    tracks = tracking.update(tracks, t2d, boxes2d, params.tracker)
+    tracks, d2t = tracking.spawn(tracks, boxes2d, valid, d2t)
+    tracks = tracking.set_box3d(tracks, d2t, boxes3d, valid)
+    # Refresh fleet-average size from the (trusted) anchor results.
+    n = jnp.maximum(jnp.sum(valid), 1)
+    mean_size = jnp.sum(jnp.where(valid[:, None], boxes3d[:, 3:6], 0.0),
+                        axis=0) / n
+    avg_size = jnp.where(jnp.sum(valid) > 0, mean_size, state.avg_size)
+    out = FrameOutput(boxes3d=boxes3d, valid=valid, det_to_track=d2t,
+                      track_boxes2d=pred2d)
+    return MobyState(tracks=tracks, avg_size=avg_size, key=state.key), out
+
+
+def transform_step(state: MobyState, points: jnp.ndarray,
+                   det_boxes2d: jnp.ndarray, det_valid: jnp.ndarray,
+                   label_img: jnp.ndarray, calib: projection.Calibration,
+                   params: TransformParams = TransformParams()) -> tuple[MobyState, FrameOutput]:
+    """Transform one non-anchor frame (steps 3-4 in Fig. 4).
+
+    Args:
+      state: Moby per-stream state.
+      points: (N, 3) LiDAR points.
+      det_boxes2d: (D, 4) 2D detections [x1,y1,x2,y2].
+      det_valid: (D,) mask.
+      label_img: (H, W) int32 instance-id image; id i+1 = detection slot i.
+      calib: sensor calibration.
+    """
+    d = det_boxes2d.shape[0]
+    key, sub = jax.random.split(state.key)
+
+    # --- tracking-based association (§3.2) --------------------------------
+    tracks, pred2d = tracking.predict(state.tracks)
+    if params.use_tba:
+        t2d, d2t, _ = association.associate(pred2d, tracks.active, det_boxes2d,
+                                            det_valid, params.iou_assoc)
+        tracks = tracking.update(tracks, t2d, det_boxes2d, params.tracker)
+        tracks, d2t = tracking.spawn(tracks, det_boxes2d, det_valid, d2t)
+    else:
+        # Ablation (Table 4, TRS-only): no association — every detection is
+        # treated as a new object.
+        d2t = jnp.full((d,), -1, jnp.int32)
+
+    # --- point projection (§3.3) ------------------------------------------
+    uv, _, vis = projection.project_points(points, calib)
+    labels = projection.label_points(uv, vis, label_img)
+    clusters, cvalid, _ = projection.build_clusters(points, labels, d,
+                                                    params.pts_per_obj)
+
+    # --- point filtration (Algorithm 1) ------------------------------------
+    # Associated objects carry a center prior from the previous 3D box.
+    t_idx0 = jnp.clip(d2t, 0, state.tracks.x.shape[0] - 1)
+    prior_ok = (d2t >= 0) & tracks.has_box3d[t_idx0]
+    prior_centers = tracks.box3d[t_idx0][:, :3]
+    keep = filtration.filter_clusters(clusters, cvalid, params.filtration,
+                                      prior_centers, prior_ok)
+
+    # --- RANSAC surface fitting --------------------------------------------
+    fit = ransac.ransac_planes(sub, clusters, keep, params.ransac,
+                               params.ransac_score_fn)
+
+    # --- 3D box estimation (Eqs. 1-2, Fig. 10) ------------------------------
+    t_idx = jnp.clip(d2t, 0, state.tracks.x.shape[0] - 1)
+    associated = (d2t >= 0) & tracks.has_box3d[t_idx]
+    prev_boxes = tracks.box3d[t_idx]
+    boxes3d, ok = box_estimation.estimate_boxes(
+        clusters, fit.inliers, keep, fit.normal, fit.ok, associated,
+        prev_boxes, state.avg_size, params.boxest)
+    valid = ok & det_valid
+
+    # --- write back for the next frame --------------------------------------
+    if params.use_tba:
+        tracks = tracking.set_box3d(tracks, d2t, boxes3d, valid)
+
+    out = FrameOutput(boxes3d=boxes3d, valid=valid, det_to_track=d2t,
+                      track_boxes2d=pred2d)
+    return MobyState(tracks=tracks, avg_size=state.avg_size, key=key), out

@@ -1,0 +1,1 @@
+"""Data substrate: synthetic KITTI-like scenes and LM token pipelines."""

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the system's compute hot spots.
+
+Each kernel package has three modules:
+  <name>.py -- ``pl.pallas_call`` with explicit BlockSpec VMEM tiling
+  ops.py    -- jit'd public wrapper (padding, layout, interpret switch)
+  ref.py    -- pure-jnp oracle used by the allclose sweep tests
+
+On this CPU container every kernel is validated with ``interpret=True``
+(the kernel body executes in Python); the BlockSpecs are written for TPU
+v5e VMEM/MXU tiling (lane=128, sublane=8) as the deployment target.
+"""

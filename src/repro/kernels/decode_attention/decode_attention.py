@@ -1,0 +1,94 @@
+"""Pallas kernel: single-token decode attention over long KV caches.
+
+The serving hot spot: one query head-block attends over an S-long cache.
+Grid = (B*KV, n_s_blocks) with the s-axis innermost; the online-softmax
+state for all G query heads of this kv head lives in revisited output
+buffers (same scratch-free pattern as the flash kernel). Cache blocks
+stream HBM->VMEM once per token — decode is bandwidth-bound, and this
+kernel's byte traffic is exactly S*hd*2 per kv head, the roofline minimum.
+
+Per-request lengths (`cache_pos`) mask tail positions, so one batch mixes
+ragged sequence lengths (continuous batching).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TS = 512
+_NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, pos_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale, n_s):
+    si = pl.program_id(1)
+
+    @pl.when(si == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    limit = pos_ref[0]
+    live = si * TS < limit
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                  # (G, hd)
+        k = k_ref[0].astype(jnp.float32)                  # (TS, hd)
+        v = v_ref[0].astype(jnp.float32)                  # (TS, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        spos = si * TS + jax.lax.broadcasted_iota(jnp.int32, (1, TS), 1)
+        s = jnp.where(spos < limit, s, _NEG)              # (G, TS)
+        m_prev = m_ref[...]                               # (G,)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+        m_ref[...] = m_new
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(si == n_s - 1)
+    def _final():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q: jnp.ndarray, cache_k: jnp.ndarray,
+                            cache_v: jnp.ndarray, cache_pos: jnp.ndarray,
+                            interpret: bool = False) -> jnp.ndarray:
+    """q: (B*KV, G, hd); cache_k/v: (B*KV, S, hd) with S % TS == 0;
+    cache_pos: (B*KV,) int32. Returns (B*KV, G, hd)."""
+    bkv, g, hd = q.shape
+    s = cache_k.shape[1]
+    n_s = s // TS
+    kernel = functools.partial(_kernel, scale=hd ** -0.5, n_s=n_s)
+    return pl.pallas_call(
+        kernel,
+        grid=(bkv, n_s),
+        in_specs=[
+            pl.BlockSpec((1, g, hd), lambda b, si: (b, 0, 0)),
+            pl.BlockSpec((1, TS, hd), lambda b, si: (b, si, 0)),
+            pl.BlockSpec((1, TS, hd), lambda b, si: (b, si, 0)),
+            pl.BlockSpec((1,), lambda b, si: (b,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, g, hd), lambda b, si: (b, 0, 0)),
+            pl.BlockSpec((g,), lambda b, si: (0,)),
+            pl.BlockSpec((g,), lambda b, si: (0,)),
+            pl.BlockSpec((g, hd), lambda b, si: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bkv, g, hd), q.dtype),
+            jax.ShapeDtypeStruct((g,), jnp.float32),
+            jax.ShapeDtypeStruct((g,), jnp.float32),
+            jax.ShapeDtypeStruct((g, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, cache_k, cache_v, cache_pos)[0]

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for single-token decode attention over a KV cache."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q: jnp.ndarray, cache_k: jnp.ndarray,
+                         cache_v: jnp.ndarray, cache_pos: jnp.ndarray
+                         ) -> jnp.ndarray:
+    """q: (B, H, hd); cache_k/v: (B, KV, S, hd); cache_pos: (B,) lengths.
+
+    Attends over positions [0, cache_pos) per request (the current token's
+    kv is assumed already written at cache_pos - 1). Returns (B, H, hd).
+    """
+    b, h, hd = q.shape
+    kv, s = cache_k.shape[1], cache_k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, kv, g, hd).astype(jnp.float32)
+    scores = jnp.einsum("bkgh,bksh->bkgs", qg,
+                        cache_k.astype(jnp.float32)) * hd ** -0.5
+    mask = jnp.arange(s)[None, :] < cache_pos[:, None]       # (B, S)
+    scores = jnp.where(mask[:, None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bkgs,bksh->bkgh", w, cache_v.astype(jnp.float32))
+    return o.reshape(b, h, hd).astype(q.dtype)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for blocked causal attention (GQA-aware)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        causal: bool = True) -> jnp.ndarray:
+    """q: (B, H, SQ, hd); k/v: (B, KV, SK, hd). Returns (B, H, SQ, hd)."""
+    b, h, sq, hd = q.shape
+    kv = k.shape[1]
+    g = h // kv
+    qg = q.reshape(b, kv, g, sq, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgqh,bksh->bkgqs", qg, kf) * hd ** -0.5
+    if causal:
+        sk = k.shape[2]
+        qi = jnp.arange(sq)[:, None]
+        kj = jnp.arange(sk)[None, :]
+        s = jnp.where(kj <= qi, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksh->bkgqh", w, vf)
+    return o.reshape(b, h, sq, hd).astype(q.dtype)

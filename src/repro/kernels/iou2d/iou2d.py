@@ -1,0 +1,50 @@
+"""Pallas kernel: tiled pairwise axis-aligned IoU (association cost matrix).
+
+Tracking-based association computes an IoU matrix between predicted track
+boxes and current detections every frame for every stream. The kernel tiles
+(N, M) into (TN, TM) VMEM blocks; coordinates are kept as four separate
+(rows) vectors so each block is a pure VPU broadcast-compare-multiply.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_N = 128
+TILE_M = 128
+
+
+def _kernel(a_ref, b_ref, out_ref):
+    # a: (TN, 4); b: (TM, 4) -> out (TN, TM)
+    a = a_ref[...]
+    b = b_ref[...]
+    ax1, ay1, ax2, ay2 = a[:, 0:1], a[:, 1:2], a[:, 2:3], a[:, 3:4]
+    bx1 = b[:, 0][None, :]
+    by1 = b[:, 1][None, :]
+    bx2 = b[:, 2][None, :]
+    by2 = b[:, 3][None, :]
+    ix = jnp.maximum(jnp.minimum(ax2, bx2) - jnp.maximum(ax1, bx1), 0.0)
+    iy = jnp.maximum(jnp.minimum(ay2, by2) - jnp.maximum(ay1, by1), 0.0)
+    inter = ix * iy
+    aa = jnp.maximum((ax2 - ax1) * (ay2 - ay1), 0.0)
+    ab = jnp.maximum((bx2 - bx1) * (by2 - by1), 0.0)
+    union = aa + ab - inter
+    out_ref[...] = jnp.where(union > 1e-9, inter / union, 0.0)
+
+
+def iou2d_pallas(a: jnp.ndarray, b: jnp.ndarray,
+                 interpret: bool = False) -> jnp.ndarray:
+    """a: (N, 4), b: (M, 4); N, M multiples of the tile sizes."""
+    n, m = a.shape[0], b.shape[0]
+    return pl.pallas_call(
+        _kernel,
+        grid=(n // TILE_N, m // TILE_M),
+        in_specs=[
+            pl.BlockSpec((TILE_N, 4), lambda i, j: (i, 0)),
+            pl.BlockSpec((TILE_M, 4), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_N, TILE_M), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        interpret=interpret,
+    )(a, b)

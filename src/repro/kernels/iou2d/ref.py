@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the pairwise axis-aligned IoU matrix."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def iou2d_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """a: (N, 4), b: (M, 4) [x1,y1,x2,y2] -> (N, M) IoU."""
+    ax1, ay1, ax2, ay2 = a[:, 0:1], a[:, 1:2], a[:, 2:3], a[:, 3:4]
+    bx1, by1, bx2, by2 = b[None, :, 0], b[None, :, 1], b[None, :, 2], b[None, :, 3]
+    ix = jnp.maximum(jnp.minimum(ax2, bx2) - jnp.maximum(ax1, bx1), 0.0)
+    iy = jnp.maximum(jnp.minimum(ay2, by2) - jnp.maximum(ay1, by1), 0.0)
+    inter = ix * iy
+    aa = jnp.maximum((ax2 - ax1) * (ay2 - ay1), 0.0)
+    ab = jnp.maximum((bx2 - bx1) * (by2 - by1), 0.0)
+    union = aa + ab - inter
+    return jnp.where(union > 1e-9, inter / union, 0.0)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for point->pillar scatter-max."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pillar_scatter_ref(feats: jnp.ndarray, pillar_idx: jnp.ndarray,
+                       valid: jnp.ndarray, n_pillars: int) -> jnp.ndarray:
+    """Scatter-max point features into a dense pillar grid.
+
+    Args:
+      feats: (N, C) per-point features.
+      pillar_idx: (N,) int32 flat pillar index per point.
+      valid: (N,) bool.
+      n_pillars: G, number of grid cells.
+
+    Returns: (G, C) max-pooled features (0 where empty).
+    """
+    neg = jnp.full((n_pillars, feats.shape[1]), -jnp.inf, feats.dtype)
+    idx = jnp.where(valid, pillar_idx, n_pillars)  # invalid -> dropped
+    out = neg.at[idx].max(jnp.where(valid[:, None], feats, -jnp.inf),
+                          mode="drop")
+    return jnp.where(jnp.isfinite(out), out, 0.0)

@@ -1,0 +1,47 @@
+"""Public wrapper: padding/layout + interpret switch + score_fn adapter."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ransac_score.ransac_score import ransac_score_pallas
+
+_LANE = 128
+
+
+def _pad_to(x, axis, mult, value=0):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("thresh", "interpret"))
+def ransac_score(points: jnp.ndarray, valid: jnp.ndarray,
+                 normals: jnp.ndarray, offsets: jnp.ndarray,
+                 thresh: float, interpret: bool = True) -> jnp.ndarray:
+    """(O,P,3),(O,P),(O,K,3),(O,K) -> (O,K) int32 inlier counts."""
+    o, p, _ = points.shape
+    k = normals.shape[1]
+    pts_t = _pad_to(jnp.swapaxes(points, 1, 2), 2, _LANE)      # (O, 3, P')
+    val = _pad_to(valid.astype(jnp.int32), 1, _LANE)           # (O, P')
+    nrm = _pad_to(normals, 1, _LANE)                           # (O, K', 3)
+    # Padded hypotheses get a huge offset -> zero inliers.
+    off = _pad_to(offsets, 1, _LANE, value=1e9)                # (O, K')
+    out = ransac_score_pallas(pts_t, val, nrm, off, thresh, interpret)
+    return out[:, :k]
+
+
+def make_score_fn(interpret: bool = True):
+    """Adapter matching repro.core.ransac.score_planes_ref's signature
+    (single object: (P,3),(P,),(K,3),(K,) -> (K,)) for use as
+    TransformParams.ransac_score_fn. Works under vmap via batching."""
+    def score(points, valid, normals, offsets, thresh):
+        out = ransac_score(points[None], valid[None], normals[None],
+                           offsets[None], float(thresh), interpret)
+        return out[0]
+    return score

@@ -1,0 +1,283 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay the first statements: JAX locks the device
+count at first initialization, and the production meshes need 512 host
+placeholder devices. (Everything else — tests, benches — sees 1 device.)
+
+For each cell this script:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. lowers the arch's train_step / forward-prefill / decode_step with
+     ShapeDtypeStruct inputs (no allocation) and the cell's shardings,
+  3. compiles, prints memory_analysis() (proves it fits) and
+     cost_analysis() (FLOPs/bytes for §Roofline),
+  4. parses collective operand bytes from the optimized HLO,
+  5. appends one JSON record per cell to --out.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2_5_3b --shape train_4k \
+      [--multipod] [--out results/dryrun.json] [--seq-shard] [--accum N]
+  python -m repro.launch.dryrun --all   # every supported cell, both meshes
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.launch import mesh as mesh_lib
+from repro.launch import specs as specs_lib
+from repro.models import decode, lm
+from repro.models import params as params_lib
+from repro.models.config import ArchConfig
+from repro.models.sharding import activation_rules
+from repro.runtime import costmodel, hlo_analysis
+from repro.train import optimizer as opt_lib
+from repro.train import trainstep
+
+
+def _opt_structs(param_structs):
+    return jax.eval_shape(opt_lib.init, param_structs)
+
+
+def _opt_specs(param_specs, param_structs=None, zero1: bool = False):
+    if zero1 and param_structs is not None:
+        mspec = opt_lib.zero1_specs(param_specs, param_structs)
+    else:
+        mspec = param_specs
+    return opt_lib.OptState(
+        step=jax.sharding.PartitionSpec(),
+        m=mspec, v=mspec)
+
+
+def lower_cell(cfg: ArchConfig, shape_name: str, mesh, verbose: bool = True,
+               decode_seq_axis=None, zero1: bool = False):
+    """Lower one cell. Returns (lowered, meta)."""
+    shape = configs.SHAPES[shape_name]
+    rules = specs_lib.make_rules(cfg, mesh)
+    p_structs, p_specs = specs_lib.param_structs_and_specs(cfg, mesh)
+    kind = shape["kind"]
+
+    with jax.set_mesh(mesh), activation_rules(rules):
+        if kind == "train":
+            in_structs, in_specs = specs_lib.train_input_specs(cfg, shape, mesh)
+            o_structs = _opt_structs(p_structs)
+            o_specs = _opt_specs(p_specs, p_structs, zero1)
+            step = trainstep.make_train_step(cfg, opt_lib.AdamWConfig())
+            fn = jax.jit(step,
+                         in_shardings=(p_specs, o_specs, in_specs),
+                         out_shardings=(p_specs, o_specs, None),
+                         donate_argnums=(0, 1))
+            lowered = fn.lower(p_structs, o_structs, in_structs)
+        elif kind == "prefill":
+            in_structs, in_specs = specs_lib.prefill_input_specs(cfg, shape,
+                                                                 mesh)
+            def prefill(params, batch):
+                return lm.forward(params, cfg, tokens=batch.get("tokens"),
+                                  enc_embeds=batch.get("enc_embeds"))
+            fn = jax.jit(prefill, in_shardings=(p_specs, in_specs),
+                         out_shardings=None)
+            lowered = fn.lower(p_structs, in_structs)
+        else:  # decode
+            (st_structs, tok_struct), (st_specs, tok_spec) = \
+                specs_lib.decode_input_specs(cfg, shape, mesh,
+                                             seq_axis=decode_seq_axis)
+            def serve_step(params, state, tokens):
+                return decode.decode_step(params, cfg, state, tokens)
+            fn = jax.jit(serve_step,
+                         in_shardings=(p_specs, st_specs, tok_spec),
+                         out_shardings=(None, st_specs),
+                         donate_argnums=(1,))
+            lowered = fn.lower(p_structs, st_structs, tok_struct)
+    return lowered
+
+
+def _active_params(cfg: ArchConfig, n_params: int) -> float:
+    if not cfg.n_experts:
+        return n_params
+    expert = 3 * cfg.d_model * cfg.moe_d_ff * cfg.n_experts * \
+        (cfg.n_layers - cfg.first_dense)
+    return n_params - expert + expert * cfg.top_k / cfg.n_experts
+
+
+def model_flops_estimate(cfg: ArchConfig, shape_name: str) -> float:
+    """MODEL_FLOPS: 6*N*D (train) / 2*N_active*D (decode, per token)."""
+    defs = lm.model_defs(cfg)
+    n_params = params_lib.param_count(defs)
+    active = _active_params(cfg, n_params)
+    shape = configs.SHAPES[shape_name]
+    if shape["kind"] == "train":
+        tokens = shape["global_batch"] * shape["seq_len"]
+        return costmodel.lm_train_flops(active, tokens)
+    if shape["kind"] == "prefill":
+        tokens = shape["global_batch"] * shape["seq_len"]
+        return costmodel.lm_decode_flops(active, tokens)
+    # decode: one token per request.
+    return costmodel.lm_decode_flops(active, shape["global_batch"])
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             seq_shard: bool = False, accum: int = 0,
+             rules_override: tuple = (), decode_seq_axis=None,
+             zero1: bool = False) -> dict:
+    cfg = configs.get(arch)
+    if seq_shard:
+        cfg = dataclasses.replace(cfg, seq_shard=True)
+    if accum:
+        cfg = dataclasses.replace(cfg, grad_accum=accum)
+    if rules_override:
+        cfg = dataclasses.replace(
+            cfg, rules_override=cfg.rules_override + tuple(rules_override))
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    chips = 512 if multi_pod else 256
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
+        "status": "ok",
+    }
+    t0 = time.time()
+    try:
+        lowered = lower_cell(cfg, shape_name, mesh,
+                             decode_seq_axis=decode_seq_axis, zero1=zero1)
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+
+        mem = compiled.memory_analysis()
+        print(mem)  # proves it fits
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes",
+                     "alias_size_in_bytes"):
+            rec[attr] = getattr(mem, attr, None)
+
+        cost = compiled.cost_analysis()
+        print({k: cost.get(k) for k in ("flops", "bytes accessed")})
+        rec["hlo_flops"] = float(cost.get("flops", 0.0))
+        rec["hlo_bytes"] = float(cost.get("bytes accessed", 0.0))
+
+        coll = hlo_analysis.collective_bytes_from_text(compiled.as_text())
+        rec["collective_bytes_by_op"] = coll.bytes_by_op
+        rec["collective_counts"] = coll.count_by_op
+        # In-loop collectives execute once per scanned layer (x grad-accum
+        # microbatch for training); see hlo_analysis docstring.
+        trips = cfg.n_layers * (max(cfg.grad_accum, 1)
+                                if configs.SHAPES[shape_name]["kind"] ==
+                                "train" else 1)
+        rec["collective_bytes_raw"] = coll.total_bytes
+        rec["collective_bytes"] = coll.scaled_total(trips)
+        rec["collective_in_loop_bytes"] = coll.in_loop_bytes
+        rec["loop_trips"] = trips
+
+        rec["model_flops"] = model_flops_estimate(cfg, shape_name)
+        # Per-chip sharded sizes, exact from the (struct, spec) trees.
+        mesh_sizes = mesh_lib.mesh_axis_sizes(mesh)
+        p_structs, p_specs = specs_lib.param_structs_and_specs(cfg, mesh)
+
+        def _sharded_bytes(structs, specs):
+            total = 0
+            for st, sp in zip(jax.tree_util.tree_leaves(structs),
+                              jax.tree_util.tree_leaves(
+                                  specs, is_leaf=lambda x: isinstance(
+                                      x, jax.sharding.PartitionSpec))):
+                f = 1
+                for entry in sp:
+                    for ax in ((entry,) if isinstance(entry, str)
+                               else (entry or ())):
+                        f *= mesh_sizes[ax]
+                total += st.size * jnp.dtype(st.dtype).itemsize / f
+            return total
+
+        pbytes = _sharded_bytes(p_structs, p_specs)
+        rec["param_bytes_per_chip"] = pbytes
+        sbytes = 0.0
+        if configs.SHAPES[shape_name]["kind"] == "decode":
+            ss, sp = specs_lib.decode_input_specs(
+                cfg, configs.SHAPES[shape_name], mesh)
+            sbytes = _sharded_bytes(ss[0], sp[0])
+        rec["state_bytes_per_chip"] = sbytes
+
+        defs = lm.model_defs(cfg)
+        n_params = params_lib.param_count(defs)
+        analytic = costmodel.analytic_cell_cost(
+            cfg, configs.SHAPES[shape_name], n_params,
+            _active_params(cfg, n_params), pbytes, sbytes, chips)
+        rec["analytic_flops_per_chip"] = analytic["flops_per_chip"]
+        rec["analytic_hbm_per_chip"] = analytic["hbm_bytes_per_chip"]
+
+        # Roofline terms: analytic flops/bytes (scan-aware), HLO-parsed
+        # collectives (loop-scaled). Raw HLO numbers stay in the record.
+        terms = costmodel.roofline_terms(
+            max(rec["hlo_flops"], analytic["flops_per_chip"]),
+            max(rec["hlo_bytes"], analytic["hbm_bytes_per_chip"]),
+            rec["collective_bytes"], chips=1)
+        rec["compute_s"] = terms.compute_s
+        rec["memory_s"] = terms.memory_s
+        rec["collective_s"] = terms.collective_s
+        rec["dominant"] = terms.dominant
+        rec["useful_flops_ratio"] = (
+            rec["model_flops"] / (max(rec["hlo_flops"],
+                                      analytic["flops_per_chip"]) * chips))
+    except Exception as e:  # noqa: BLE001 — record failures as data
+        rec["status"] = "fail"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["total_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--seq-shard", action="store_true")
+    ap.add_argument("--decode-seq-axis", type=str, default=None)
+    ap.add_argument("--zero1", action="store_true")
+    ap.add_argument("--accum", type=int, default=0)
+    ap.add_argument("--out", type=str, default="results/dryrun.jsonl")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in configs.ARCH_IDS:
+            for shape in configs.SHAPES:
+                if not configs.shape_supported(arch, shape):
+                    continue
+                for multi in (False, True):
+                    cells.append((arch, shape, multi))
+    else:
+        assert args.arch and args.shape
+        if not configs.shape_supported(args.arch, args.shape):
+            print(f"SKIP {args.arch} x {args.shape}: unsupported "
+                  "(full-attention arch at 500k; see DESIGN.md)")
+            return
+        cells.append((args.arch, args.shape, args.multipod))
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    for arch, shape, multi in cells:
+        print(f"=== dryrun {arch} x {shape} x "
+              f"{'2x16x16' if multi else '16x16'} ===", flush=True)
+        rec = run_cell(arch, shape, multi, seq_shard=args.seq_shard,
+                       accum=args.accum,
+                       decode_seq_axis=args.decode_seq_axis,
+                       zero1=args.zero1)
+        with open(args.out, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+        status = rec["status"]
+        print(f"--> {status} in {rec['total_s']}s "
+              f"(dominant={rec.get('dominant')})", flush=True)
+        if status == "fail":
+            print(rec["error"], flush=True)
+            print(rec.get("traceback", ""), flush=True)
+
+
+if __name__ == "__main__":
+    main()

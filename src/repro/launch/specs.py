@@ -1,0 +1,168 @@
+"""Input/parameter/cache ShapeDtypeStructs and PartitionSpecs per
+(architecture x input shape x mesh) — the glue between the model zoo and
+pjit. Used by the dry-run, the trainer, and the serving engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.launch import mesh as mesh_lib
+from repro.models import decode, lm
+from repro.models import params as params_lib
+from repro.models.config import ArchConfig
+
+
+def make_rules(cfg: ArchConfig, mesh) -> dict:
+    multi = "pod" in mesh.axis_names
+    rules = params_lib.default_rules(multi_pod=multi)
+    rules = cfg.rules(rules)
+    if cfg.seq_shard:
+        rules["seq"] = "model"  # sequence-parallel activations
+    return rules
+
+
+def param_structs_and_specs(cfg: ArchConfig, mesh):
+    defs = lm.model_defs(cfg)
+    rules = make_rules(cfg, mesh)
+    structs = params_lib.abstract_params(defs)
+    specs = params_lib.to_pspec(defs, rules)
+    return structs, specs
+
+
+# ---------------------------------------------------------------------------
+# Batch specs
+# ---------------------------------------------------------------------------
+
+
+def _batch_axes(mesh, global_batch: int):
+    axes = mesh_lib.batch_axes(mesh)
+    size = 1
+    for a in axes:
+        size *= mesh_lib.mesh_axis_sizes(mesh)[a]
+    if global_batch % size == 0:
+        return axes
+    # Fall back to whatever prefix divides.
+    if global_batch % mesh_lib.mesh_axis_sizes(mesh)[axes[-1]] == 0:
+        return (axes[-1],)
+    return ()
+
+
+def train_input_specs(cfg: ArchConfig, shape: dict, mesh):
+    gb, s = shape["global_batch"], shape["seq_len"]
+    baxes = _batch_axes(mesh, gb)
+    bspec = baxes if baxes else None
+    structs = {
+        "tokens": jax.ShapeDtypeStruct((gb, s), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((gb, s), jnp.int32),
+    }
+    specs = {"tokens": P(bspec, None), "labels": P(bspec, None)}
+    if cfg.family in ("encdec", "audio"):
+        structs["enc_embeds"] = jax.ShapeDtypeStruct((gb, cfg.enc_seq,
+                                                      cfg.d_model),
+                                                     jnp.float32)
+        specs["enc_embeds"] = P(bspec, None, None)
+    return structs, specs
+
+
+def prefill_input_specs(cfg: ArchConfig, shape: dict, mesh):
+    gb, s = shape["global_batch"], shape["seq_len"]
+    baxes = _batch_axes(mesh, gb)
+    bspec = baxes if baxes else None
+    structs = {"tokens": jax.ShapeDtypeStruct((gb, s), jnp.int32)}
+    specs = {"tokens": P(bspec, None)}
+    if cfg.family in ("encdec", "audio"):
+        structs["enc_embeds"] = jax.ShapeDtypeStruct(
+            (gb, cfg.enc_seq, cfg.d_model), jnp.float32)
+        specs["enc_embeds"] = P(bspec, None, None)
+    return structs, specs
+
+
+# ---------------------------------------------------------------------------
+# Decode-state specs
+# ---------------------------------------------------------------------------
+
+
+def decode_state_structs(cfg: ArchConfig, batch: int, max_len: int):
+    fn = functools.partial(decode.init_decode, cfg, batch, max_len)
+    return jax.eval_shape(fn)
+
+
+def _model_ok(mesh, n: int) -> bool:
+    return n % mesh_lib.mesh_axis_sizes(mesh)["model"] == 0 and n > 0
+
+
+def decode_state_specs(cfg: ArchConfig, state_structs, mesh, batch: int,
+                       seq_axis=None):
+    """PartitionSpecs for the decode caches, matched by leaf path/rank.
+
+    Policy: shard the request batch over the data axes; shard kv-heads/SSM
+    heads over the model axis when divisible; for batch=1 long-context,
+    shard the cache sequence axis over the data axis instead.
+    """
+    baxes = _batch_axes(mesh, batch)
+    bspec = baxes if baxes and batch > 1 else None
+    seq_spec = seq_axis if seq_axis else ("data" if batch == 1 else None)
+    kv_spec = "model" if _model_ok(mesh, cfg.n_kv_heads) and \
+        dict(cfg.rules_override).get("kv_heads", "model") == "model" else None
+
+    def leaf_spec(path, leaf):
+        name = None
+        for entry in reversed(path):
+            if isinstance(entry, jax.tree_util.DictKey):
+                name = entry.key
+                break
+            if isinstance(entry, jax.tree_util.GetAttrKey):
+                name = entry.name
+                break
+        nd = len(leaf.shape)
+        pad = lambda rightmost: P(*([None] * (nd - len(rightmost)) +
+                                    list(rightmost)))
+        if name in ("k", "v", "cross_k", "cross_v"):
+            # (..., B, S, KV, hd)
+            return pad([bspec, seq_spec, kv_spec, None])
+        if name in ("ckv", "krope"):
+            # (..., B, S, R)
+            return pad([bspec, seq_spec, None])
+        if name == "state":
+            # mamba2: (..., B, H, P, N); align H with the weight sharding.
+            h_ok = _model_ok(mesh, leaf.shape[-3])
+            return pad([bspec, "model" if h_ok else None, None, None])
+        if name == "conv_x":
+            # (..., B, CW-1, H, P)
+            h_ok = _model_ok(mesh, leaf.shape[-2])
+            return pad([bspec, None, "model" if h_ok else None, None])
+        if name in ("conv_b", "conv_c"):
+            return pad([bspec, None, None])
+        if name == "cache_pos":
+            return P(bspec)
+        # Everything else (mlstm/slstm memories): shard only the batch axis,
+        # located from the right by size match.
+        parts = [None] * nd
+        if bspec is not None:
+            for i in range(nd - 1, -1, -1):
+                if leaf.shape[i] == batch:
+                    parts[i] = bspec
+                    break
+        return P(*parts)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, state_structs)
+
+
+def decode_input_specs(cfg: ArchConfig, shape: dict, mesh, seq_axis=None):
+    """serve_step inputs: (decode_state, tokens). KV cache length = seq_len."""
+    gb, s = shape["global_batch"], shape["seq_len"]
+    state_structs = decode_state_structs(cfg, gb, s)
+    state_specs = decode_state_specs(cfg, state_structs, mesh, gb,
+                                     seq_axis=seq_axis)
+    baxes = _batch_axes(mesh, gb)
+    bspec = baxes if baxes and gb > 1 else None
+    tok_struct = jax.ShapeDtypeStruct((gb,), jnp.int32)
+    tok_spec = P(bspec)
+    return (state_structs, tok_struct), (state_specs, tok_spec)

@@ -1,0 +1,286 @@
+"""Single-token decode with per-family caches (the ``serve_step`` substrate).
+
+Caches are stacked along the layer axis and scanned jointly with the layer
+parameters, so the decode HLO stays small at any depth. All updates are
+in-place-friendly (``dynamic_update_slice``) so XLA can donate buffers.
+
+Cache layouts (S = max cache length):
+  full attention : K/V   (L, B, S, KV, hd)       sharded (None, batch, cache_seq, kv_heads, None)
+  MLA            : c_kv  (L, B, S, kv_lora), k_rope (L, B, S, rope)
+  mamba2         : state (L, B, H, P, N) + conv history
+  mlstm / slstm  : matrix/scalar memories (O(1) in S)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers, mamba2, mla, xlstm
+from repro.models.config import ArchConfig
+from repro.models.sharding import constrain
+
+
+class DecodeState(NamedTuple):
+    caches: Any          # per-family pytree, stacked on the layer axis
+    cache_pos: jnp.ndarray  # (B,) int32 current lengths
+    enc_out: Any = None  # (B, enc_seq, D) encoder output (encdec only)
+
+
+# ---------------------------------------------------------------------------
+# Cache allocation
+# ---------------------------------------------------------------------------
+
+
+def _kv_cache(n_layers, b, s, kv, hd, dtype):
+    return {"k": jnp.zeros((n_layers, b, s, kv, hd), dtype),
+            "v": jnp.zeros((n_layers, b, s, kv, hd), dtype)}
+
+
+def init_decode(cfg: ArchConfig, batch: int, max_len: int,
+                enc_out=None) -> DecodeState:
+    fam = cfg.family
+    dt = cfg.dtype
+    if fam in ("dense", "vlm"):
+        caches = _kv_cache(cfg.n_layers, batch, max_len, cfg.n_kv_heads,
+                           cfg.head_dim, dt)
+    elif fam == "moe":
+        if cfg.attn_kind == "mla":
+            mk = lambda n: {
+                "ckv": jnp.zeros((n, batch, max_len, cfg.kv_lora), dt),
+                "krope": jnp.zeros((n, batch, max_len, cfg.qk_rope_dim), dt)}
+        else:
+            mk = lambda n: _kv_cache(n, batch, max_len, cfg.n_kv_heads,
+                                     cfg.head_dim, dt)
+        caches = {"dense": mk(cfg.first_dense) if cfg.first_dense else None,
+                  "moe": mk(cfg.n_layers - cfg.first_dense)}
+    elif fam == "ssm":
+        g = cfg.n_layers // cfg.slstm_every
+        k = cfg.slstm_every
+        m = xlstm.mlstm_init_cache(cfg, batch)
+        s = xlstm.slstm_init_cache(cfg, batch)
+        caches = {
+            "m": jax.tree_util.tree_map(
+                lambda x: jnp.zeros((g, k - 1) + x.shape, x.dtype) +
+                x[None, None], m),
+            "s": jax.tree_util.tree_map(
+                lambda x: jnp.zeros((g,) + x.shape, x.dtype) + x[None], s),
+        }
+    elif fam == "hybrid":
+        g = cfg.n_layers // cfg.hybrid_attn_every
+        k = cfg.hybrid_attn_every
+        tail = cfg.n_layers - g * k
+        mc = mamba2.init_cache(cfg, batch, dt)
+        caches = {
+            "mamba": jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x[None, None],
+                                           (g, k) + x.shape).astype(x.dtype),
+                mc),
+            "attn": _kv_cache(g, batch, max_len, cfg.n_kv_heads, cfg.head_dim,
+                              dt),
+        }
+        if tail:
+            caches["mamba_tail"] = jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x[None],
+                                           (tail,) + x.shape).astype(x.dtype),
+                mc)
+    elif fam in ("encdec", "audio"):
+        caches = {
+            "self": _kv_cache(cfg.n_layers, batch, max_len, cfg.n_kv_heads,
+                              cfg.head_dim, dt),
+            # Cross K/V computed once from the encoder output at prefill.
+            "cross_k": jnp.zeros((cfg.n_layers, batch, cfg.enc_seq,
+                                  cfg.n_kv_heads, cfg.head_dim), dt),
+            "cross_v": jnp.zeros((cfg.n_layers, batch, cfg.enc_seq,
+                                  cfg.n_kv_heads, cfg.head_dim), dt),
+        }
+    else:
+        raise ValueError(fam)
+    return DecodeState(caches=caches,
+                       cache_pos=jnp.zeros((batch,), jnp.int32),
+                       enc_out=enc_out)
+
+
+# ---------------------------------------------------------------------------
+# Per-block decode bodies
+# ---------------------------------------------------------------------------
+
+
+def _attn_block_decode(p, h, cache_k, cache_v, cfg: ArchConfig, cache_pos,
+                       positions, moe: bool):
+    """cache_k/v: (B, S, KV, hd) single-layer slices."""
+    x = layers.norm_apply(p["ln1"], h, cfg.norm)
+    if cfg.attn_kind == "mla":
+        raise AssertionError("use _mla_block_decode")
+    a, ck, cv = layers.attn_decode_apply(p["attn"], x, cfg, cache_k, cache_v,
+                                         cache_pos, positions)
+    h = h + a
+    x = layers.norm_apply(p["ln2"], h, cfg.norm)
+    f = layers.moe_apply(p["moe"], x, cfg) if moe else \
+        layers.mlp_apply(p["mlp"], x, cfg)
+    return h + f, ck, cv
+
+
+def _mla_block_decode(p, h, cache, cfg: ArchConfig, cache_pos, positions,
+                      moe: bool):
+    x = layers.norm_apply(p["ln1"], h, cfg.norm)
+    a, ckv, krope = mla.mla_decode_apply(p["attn"], x, cfg, cache["ckv"],
+                                         cache["krope"], cache_pos, positions)
+    h = h + a
+    x = layers.norm_apply(p["ln2"], h, cfg.norm)
+    f = layers.moe_apply(p["moe"], x, cfg) if moe else \
+        layers.mlp_apply(p["mlp"], x, cfg)
+    return h + f, {"ckv": ckv, "krope": krope}
+
+
+# ---------------------------------------------------------------------------
+# decode_step
+# ---------------------------------------------------------------------------
+
+
+def decode_step(params, cfg: ArchConfig, state: DecodeState,
+                tokens: jnp.ndarray):
+    """One serving step: tokens (B,) int32 -> (logits (B, vocab), new state)."""
+    b = tokens.shape[0]
+    h = layers.embed_apply(params["embed"], tokens[:, None], cfg)  # (B,1,D)
+    h = constrain(h, ("batch", None, "embed"))
+    pos = state.cache_pos[:, None]                                 # (B,1)
+    if cfg.pos_embedding == "mrope":
+        pos = jnp.broadcast_to(pos[None], (3, b, 1))
+    fam = cfg.family
+    caches = state.caches
+
+    if fam in ("dense", "vlm"):
+        def step(hc, xs):
+            h = hc
+            p, ck, cv = xs
+            h, ck, cv = _attn_block_decode(p, h, ck, cv, cfg, state.cache_pos,
+                                           pos, moe=False)
+            return h, (ck, cv)
+
+        h, (ck, cv) = jax.lax.scan(
+            step, h, (params["blocks"], caches["k"], caches["v"]))
+        new_caches = {"k": ck, "v": cv}
+    elif fam == "moe":
+        new_caches = {"dense": None, "moe": None}
+        if cfg.attn_kind == "mla":
+            def mk_step(moe_flag):
+                def step(h, xs):
+                    p, c = xs
+                    h, c2 = _mla_block_decode(p, h, c, cfg, state.cache_pos,
+                                              pos, moe=moe_flag)
+                    return h, c2
+                return step
+        else:
+            def mk_step(moe_flag):
+                def step(h, xs):
+                    p, ck, cv = xs
+                    h, ck, cv = _attn_block_decode(p, h, ck, cv, cfg,
+                                                   state.cache_pos, pos,
+                                                   moe=moe_flag)
+                    return h, {"k": ck, "v": cv}
+                return step
+        if cfg.first_dense:
+            cd = caches["dense"]
+            xs = (params["dense_blocks"], cd) if cfg.attn_kind == "mla" else \
+                (params["dense_blocks"], cd["k"], cd["v"])
+            h, nc = jax.lax.scan(mk_step(False), h, xs)
+            new_caches["dense"] = nc
+        cm = caches["moe"]
+        xs = (params["moe_blocks"], cm) if cfg.attn_kind == "mla" else \
+            (params["moe_blocks"], cm["k"], cm["v"])
+        h, nc = jax.lax.scan(mk_step(True), h, xs)
+        new_caches["moe"] = nc
+    elif fam == "ssm":
+        def group(h, xs):
+            gp, gc = xs
+
+            def mstep(h, xs2):
+                p, c = xs2
+                xn = layers.norm_apply(p["ln"], h, cfg.norm)
+                y, c2 = xlstm.mlstm_decode_apply(p["cell"], xn, cfg, c)
+                return h + y, c2
+
+            h, mc = jax.lax.scan(mstep, h, (gp["m"], gc["m"]))
+            xn = layers.norm_apply(gp["s"]["ln"], h, cfg.norm)
+            y, sc = xlstm.slstm_decode_apply(gp["s"]["cell"], xn, cfg,
+                                             gc["s"])
+            return h + y, {"m": mc, "s": sc}
+
+        h, nc = jax.lax.scan(
+            group, h,
+            ({"m": params["mlstm_blocks"], "s": params["slstm_blocks"]},
+             {"m": caches["m"], "s": caches["s"]}))
+        new_caches = nc
+    elif fam == "hybrid":
+        shared = params["shared_attn"]
+
+        def hgroup(h, xs):
+            gp, gc, ck, cv = xs
+
+            def mstep(h, xs2):
+                p, c = xs2
+                xn = layers.norm_apply(p["ln"], h, cfg.norm)
+                y, c2 = mamba2.mamba_decode_apply(p["mamba"], xn, cfg, c)
+                return h + y, c2
+
+            h, mc = jax.lax.scan(mstep, h, (gp, gc))
+            h, ck, cv = _attn_block_decode(shared, h, ck, cv, cfg,
+                                           state.cache_pos, pos, moe=False)
+            return h, (mc, ck, cv)
+
+        h, (mc, ck, cv) = jax.lax.scan(
+            hgroup, h, (params["mamba_groups"], caches["mamba"],
+                        caches["attn"]["k"], caches["attn"]["v"]))
+        new_caches = {"mamba": mc, "attn": {"k": ck, "v": cv}}
+        if "mamba_tail" in caches:
+            def mstep(h, xs2):
+                p, c = xs2
+                xn = layers.norm_apply(p["ln"], h, cfg.norm)
+                y, c2 = mamba2.mamba_decode_apply(p["mamba"], xn, cfg, c)
+                return h + y, c2
+
+            h, tc = jax.lax.scan(mstep, h,
+                                 (params["mamba_tail"], caches["mamba_tail"]))
+            new_caches["mamba_tail"] = tc
+    elif fam in ("encdec", "audio"):
+        def step(h, xs):
+            p, ck, cv, xk, xv = xs
+            x = layers.norm_apply(p["ln1"], h, cfg.norm)
+            a, ck, cv = layers.attn_decode_apply(p["attn"], x, cfg, ck, cv,
+                                                 state.cache_pos, pos)
+            h = h + a
+            # Cross attention against precomputed encoder K/V.
+            x = layers.norm_apply(p["ln_cross"], h, cfg.norm)
+            q = jnp.einsum("bsd,dhk->bshk", x, layers.cast(p["cross"]["wq"],
+                                                           cfg))
+            hq, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+            g = hq // kv
+            qg = q.reshape(b, kv, g, hd)
+            s = jnp.einsum("bkgh,bskh->bkgs", qg, xk,
+                           preferred_element_type=jnp.float32) * hd ** -0.5
+            w = jax.nn.softmax(s, axis=-1).astype(cfg.dtype)
+            o = jnp.einsum("bkgs,bskh->bkgh", w, xv).reshape(b, 1, hq, hd)
+            h = h + jnp.einsum("bshk,hkd->bsd", o,
+                               layers.cast(p["cross"]["wo"], cfg))
+            x = layers.norm_apply(p["ln2"], h, cfg.norm)
+            h = h + layers.mlp_apply(p["mlp"], x, cfg)
+            return h, (ck, cv)
+
+        h, (ck, cv) = jax.lax.scan(
+            step, h, (params["blocks"], caches["self"]["k"],
+                      caches["self"]["v"], caches["cross_k"],
+                      caches["cross_v"]))
+        new_caches = dict(caches, self={"k": ck, "v": cv})
+    else:
+        raise ValueError(fam)
+
+    h = layers.norm_apply(params["final_norm"], h, cfg.norm)
+    logits = layers.unembed_apply(params["embed"], h, cfg)[:, 0]
+    new_state = DecodeState(caches=new_caches,
+                            cache_pos=state.cache_pos + 1,
+                            enc_out=state.enc_out)
+    return logits, new_state

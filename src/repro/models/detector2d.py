@@ -1,0 +1,128 @@
+"""YOLO-lite 2D instance detector in JAX (the "edge" model, trainable).
+
+CenterNet-style single-stage head over a tiny conv backbone: center
+heatmap + size regression (+ optional mask logits at feature resolution).
+This is the trainable stand-in for YOLOv5n-seg (DESIGN.md §3): the Moby
+pipeline consumes its boxes + instance label image through the same
+interface as the oracle detector.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamDef, fanin_init, ones_init, zeros_init
+
+
+@dataclasses.dataclass(frozen=True)
+class Det2DConfig:
+    img_h: int = 128
+    img_w: int = 416
+    in_ch: int = 3
+    dims: tuple = (16, 32, 64)
+    stride: int = 8              # product of the stride-2 blocks
+    max_det: int = 16
+
+
+def detector2d_defs(cfg: Det2DConfig):
+    d = {}
+    cin = cfg.in_ch
+    for i, cout in enumerate(cfg.dims):
+        d[f"conv{i}"] = ParamDef((3, 3, cin, cout), (None,) * 4,
+                                 init=fanin_init())
+        d[f"scale{i}"] = ParamDef((cout,), (None,), init=ones_init())
+        cin = cout
+    d["head_hm"] = ParamDef((1, 1, cin, 1), (None,) * 4, init=fanin_init())
+    d["head_wh"] = ParamDef((1, 1, cin, 4), (None,) * 4, init=fanin_init())
+    return d
+
+
+def _norm_relu(x, scale):
+    mu = jnp.mean(x, axis=(1, 2), keepdims=True)
+    var = jnp.var(x, axis=(1, 2), keepdims=True)
+    return jax.nn.relu((x - mu) * jax.lax.rsqrt(var + 1e-5) * scale)
+
+
+def forward(params, cfg: Det2DConfig, img: jnp.ndarray):
+    """img: (B, H, W, C) -> (heatmap (B,h,w), boxreg (B,h,w,4))."""
+    x = img
+    for i in range(len(cfg.dims)):
+        x = jax.lax.conv_general_dilated(
+            x, params[f"conv{i}"], (2, 2), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        x = _norm_relu(x, params[f"scale{i}"])
+    hm = jax.lax.conv_general_dilated(
+        x, params["head_hm"], (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))[..., 0]
+    wh = jax.lax.conv_general_dilated(
+        x, params["head_wh"], (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return hm, wh
+
+
+def make_targets(cfg: Det2DConfig, boxes: jnp.ndarray, valid: jnp.ndarray):
+    """Gaussian-free point targets at box centers. boxes: (O,4) pixels."""
+    h = cfg.img_h // cfg.stride
+    w = cfg.img_w // cfg.stride
+    hm = jnp.zeros((h, w))
+    wh = jnp.zeros((h, w, 4))
+
+    def place(carry, i):
+        hm, wh = carry
+        b = boxes[i]
+        v = valid[i]
+        cx = jnp.clip(((b[0] + b[2]) / 2 / cfg.stride).astype(jnp.int32),
+                      0, w - 1)
+        cy = jnp.clip(((b[1] + b[3]) / 2 / cfg.stride).astype(jnp.int32),
+                      0, h - 1)
+        size = jnp.array([(b[2] - b[0]) / cfg.stride,
+                          (b[3] - b[1]) / cfg.stride,
+                          ((b[0] + b[2]) / 2 % cfg.stride) / cfg.stride,
+                          ((b[1] + b[3]) / 2 % cfg.stride) / cfg.stride])
+        hm = jnp.where(v, hm.at[cy, cx].set(1.0), hm)
+        wh = jnp.where(v, wh.at[cy, cx].set(size), wh)
+        return (hm, wh), None
+
+    (hm, wh), _ = jax.lax.scan(place, (hm, wh), jnp.arange(boxes.shape[0]))
+    return hm, wh
+
+
+def loss_fn(params, cfg: Det2DConfig, img, boxes, valid):
+    hm_p, wh_p = forward(params, cfg, img[None])
+    hm_t, wh_t = make_targets(cfg, boxes, valid)
+    p = jax.nn.sigmoid(hm_p[0])
+    pos = hm_t > 0.5
+    focal = jnp.where(pos, -((1 - p) ** 2) * jnp.log(jnp.clip(p, 1e-7, 1.0)),
+                      -(p ** 2) * jnp.log(jnp.clip(1 - p, 1e-7, 1.0)))
+    n_pos = jnp.maximum(jnp.sum(pos), 1)
+    cls_loss = jnp.sum(focal) / n_pos
+    l1 = jnp.sum(jnp.abs(wh_p[0] - wh_t) * pos[..., None]) / n_pos
+    return cls_loss + l1, {"cls": cls_loss, "l1": l1}
+
+
+def detect(params, cfg: Det2DConfig, img: jnp.ndarray):
+    """Returns (boxes2d (K,4) pixels, scores (K,), label_img (H,W))."""
+    hm, wh = forward(params, cfg, img[None])
+    p = jax.nn.sigmoid(hm[0])
+    h, w = p.shape
+    flat = p.reshape(-1)
+    scores, idx = jax.lax.top_k(flat, cfg.max_det)
+    cy, cx = idx // w, idx % w
+    size = wh[0].reshape(-1, 4)[idx]
+    bw = jnp.maximum(size[:, 0], 0.5) * cfg.stride
+    bh = jnp.maximum(size[:, 1], 0.5) * cfg.stride
+    cxs = (cx.astype(jnp.float32) + size[:, 2]) * cfg.stride
+    cys = (cy.astype(jnp.float32) + size[:, 3]) * cfg.stride
+    boxes = jnp.stack([cxs - bw / 2, cys - bh / 2, cxs + bw / 2,
+                       cys + bh / 2], axis=1)
+    # Label image: paint detection boxes far-to-near by score (simple mask
+    # stand-in at full resolution).
+    yy, xx = jnp.mgrid[0:cfg.img_h, 0:cfg.img_w]
+    label_img = jnp.zeros((cfg.img_h, cfg.img_w), jnp.int32)
+    for i in range(cfg.max_det - 1, -1, -1):
+        inside = (xx >= boxes[i, 0]) & (xx <= boxes[i, 2]) & \
+            (yy >= boxes[i, 1]) & (yy <= boxes[i, 3]) & (scores[i] > 0.3)
+        label_img = jnp.where(inside, i + 1, label_img)
+    return boxes, scores, label_img

@@ -1,0 +1,262 @@
+"""PointPillars-style 3D detector in JAX (the "cloud" model, trainable).
+
+Pipeline (Lang et al., CVPR'19, adapted to TPU per DESIGN.md §3):
+  1. pillarize: per-point features (x,y,z,i + offsets to pillar center),
+  2. PointNet: linear + BN-free norm + relu, then max-pool per pillar via
+     the ``pillar_scatter`` Pallas kernel (scatter-max has no TPU atomics —
+     the kernel inverts the loop over pillar tiles),
+  3. 2D CNN backbone over the BEV grid (3 stride-2 blocks + upsampled
+     concat),
+  4. SSD head: per-cell anchors (0/90 deg) -> class logit + 7 box deltas.
+
+A ``second``-style variant thickens the BEV entry with z-binned occupancy
+(dense voxels replacing sparse 3D convs — the standard TPU adaptation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import boxes as box_ops
+from repro.kernels.pillar_scatter import ops as scatter_ops
+from repro.kernels.pillar_scatter import ref as scatter_ref
+from repro.models.params import ParamDef, fanin_init, ones_init, zeros_init
+
+
+@dataclasses.dataclass(frozen=True)
+class PillarConfig:
+    x_range: tuple = (0.0, 64.0)
+    y_range: tuple = (-32.0, 32.0)
+    z_range: tuple = (-3.0, 1.0)
+    pillar: float = 0.5           # metres
+    grid_h: int = 128             # y cells
+    grid_w: int = 128             # x cells
+    feat_dim: int = 32
+    backbone_dims: tuple = (32, 64, 128)
+    n_anchors: int = 2
+    use_kernel: bool = True       # pillar_scatter Pallas kernel vs ref
+    second_style: bool = False    # z-binned dense-voxel entry (SECOND)
+    z_bins: int = 8
+
+
+def _conv(key_shape, cin, cout):
+    return ParamDef((3, 3, cin, cout), (None, None, None, "mlp"),
+                    init=fanin_init())
+
+
+def detector_defs(cfg: PillarConfig):
+    in_feat = 9 if not cfg.second_style else 9 + cfg.z_bins
+    d = {
+        "pnet_w": ParamDef((in_feat, cfg.feat_dim), (None, "mlp"),
+                           init=fanin_init()),
+        "pnet_b": ParamDef((cfg.feat_dim,), (None,), init=zeros_init()),
+        "blocks": [],
+        "head_cls": ParamDef((1, 1, cfg.backbone_dims[0] * 2, cfg.n_anchors),
+                             (None, None, None, None), init=fanin_init()),
+        "head_box": ParamDef((1, 1, cfg.backbone_dims[0] * 2,
+                              cfg.n_anchors * 7),
+                             (None, None, None, None), init=fanin_init()),
+    }
+    blocks = {}
+    cin = cfg.feat_dim
+    for i, cout in enumerate(cfg.backbone_dims):
+        blocks[f"conv{i}"] = _conv(None, cin, cout)
+        blocks[f"scale{i}"] = ParamDef((cout,), (None,), init=ones_init())
+        cin = cout
+    # Upsample lateral conv back to stride 2.
+    blocks["lat1"] = _conv(None, cfg.backbone_dims[2], cfg.backbone_dims[0])
+    d["blocks"] = blocks
+    return d
+
+
+def pillarize(cfg: PillarConfig, points: jnp.ndarray, valid: jnp.ndarray):
+    """points: (N, 4) -> per-point features (N, F) + flat pillar ids (N,)."""
+    x, y = points[:, 0], points[:, 1]
+    ix = jnp.floor((x - cfg.x_range[0]) / cfg.pillar).astype(jnp.int32)
+    iy = jnp.floor((y - cfg.y_range[0]) / cfg.pillar).astype(jnp.int32)
+    inb = (ix >= 0) & (ix < cfg.grid_w) & (iy >= 0) & (iy < cfg.grid_h) & \
+        (points[:, 2] >= cfg.z_range[0]) & (points[:, 2] <= cfg.z_range[1])
+    ok = valid & inb
+    pid = jnp.where(ok, iy * cfg.grid_w + ix, -1)
+    cx = (ix.astype(jnp.float32) + 0.5) * cfg.pillar + cfg.x_range[0]
+    cy = (iy.astype(jnp.float32) + 0.5) * cfg.pillar + cfg.y_range[0]
+    feats = [points[:, 0], points[:, 1], points[:, 2], points[:, 3],
+             points[:, 0] - cx, points[:, 1] - cy,
+             points[:, 2] - 0.5 * (cfg.z_range[0] + cfg.z_range[1]),
+             jnp.hypot(points[:, 0], points[:, 1]),
+             jnp.ones_like(x)]
+    if cfg.second_style:
+        zb = jnp.clip(((points[:, 2] - cfg.z_range[0]) /
+                       (cfg.z_range[1] - cfg.z_range[0]) *
+                       cfg.z_bins).astype(jnp.int32), 0, cfg.z_bins - 1)
+        feats.append(jax.nn.one_hot(zb, cfg.z_bins).T)
+        f = jnp.concatenate([jnp.stack(feats[:-1], 1),
+                             jax.nn.one_hot(zb, cfg.z_bins)], axis=1)
+    else:
+        f = jnp.stack(feats, axis=1)
+    return f, pid, ok
+
+
+def _norm_relu(x, scale):
+    mu = jnp.mean(x, axis=(0, 1), keepdims=True)
+    var = jnp.var(x, axis=(0, 1), keepdims=True)
+    return jax.nn.relu((x - mu) * jax.lax.rsqrt(var + 1e-5) * scale)
+
+
+def forward(params, cfg: PillarConfig, points: jnp.ndarray,
+            valid: jnp.ndarray):
+    """points: (N, 4) one frame -> (cls (H,W,A), boxes (H,W,A,7))."""
+    f, pid, ok = pillarize(cfg, points, valid)
+    h = jax.nn.relu(f @ params["pnet_w"] + params["pnet_b"])      # (N, F)
+    g = cfg.grid_h * cfg.grid_w
+    if cfg.use_kernel:
+        grid = scatter_ops.pillar_scatter(h, pid, ok, g)
+    else:
+        grid = scatter_ref.pillar_scatter_ref(h, pid, ok, g)
+    bev = grid.reshape(cfg.grid_h, cfg.grid_w, cfg.feat_dim)
+
+    b = params["blocks"]
+    feats = []
+    x = bev[None]
+    for i in range(len(cfg.backbone_dims)):
+        x = jax.lax.conv_general_dilated(
+            x, b[f"conv{i}"], (2, 2), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        x = _norm_relu(x, b[f"scale{i}"])
+        feats.append(x)
+    # Fuse strides 2 and 8 at stride 2 resolution.
+    up = jax.image.resize(feats[2], feats[0].shape[:3] +
+                          (feats[2].shape[-1],), "nearest")
+    up = jax.lax.conv_general_dilated(
+        up, b["lat1"], (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    fused = jnp.concatenate([feats[0], up], axis=-1)
+    cls = jax.lax.conv_general_dilated(
+        fused, params["head_cls"], (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))[0]
+    box = jax.lax.conv_general_dilated(
+        fused, params["head_box"], (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))[0]
+    hh, ww = cls.shape[:2]
+    return cls, box.reshape(hh, ww, cfg.n_anchors, 7)
+
+
+def anchor_grid(cfg: PillarConfig, hh: int, ww: int):
+    """(H, W, A, 7) anchors: mean car size at two yaws."""
+    ys, xs = jnp.mgrid[0:hh, 0:ww]
+    stride_x = (cfg.x_range[1] - cfg.x_range[0]) / ww
+    stride_y = (cfg.y_range[1] - cfg.y_range[0]) / hh
+    cx = cfg.x_range[0] + (xs + 0.5) * stride_x
+    cy = cfg.y_range[0] + (ys + 0.5) * stride_y
+    base = jnp.stack([cx, cy, jnp.full_like(cx, -1.0)], axis=-1)
+    anchors = []
+    for yaw in (0.0, jnp.pi / 2):
+        a = jnp.concatenate([
+            base, jnp.broadcast_to(jnp.array([3.9, 1.6, 1.56]),
+                                   base.shape[:2] + (3,)),
+            jnp.full(base.shape[:2] + (1,), yaw)], axis=-1)
+        anchors.append(a)
+    return jnp.stack(anchors, axis=2)
+
+
+def decode_boxes(cfg: PillarConfig, box_deltas: jnp.ndarray):
+    """Apply deltas to the anchor grid -> absolute boxes (H, W, A, 7)."""
+    hh, ww = box_deltas.shape[:2]
+    anch = anchor_grid(cfg, hh, ww)
+    d = box_deltas
+    diag = jnp.hypot(anch[..., 3], anch[..., 4])
+    out = jnp.stack([
+        anch[..., 0] + d[..., 0] * diag,
+        anch[..., 1] + d[..., 1] * diag,
+        anch[..., 2] + d[..., 2] * anch[..., 5],
+        anch[..., 3] * jnp.exp(d[..., 3]),
+        anch[..., 4] * jnp.exp(d[..., 4]),
+        anch[..., 5] * jnp.exp(d[..., 5]),
+        anch[..., 6] + d[..., 6],
+    ], axis=-1)
+    return out
+
+
+def assign_targets(cfg: PillarConfig, hh: int, ww: int, gt_boxes: jnp.ndarray,
+                   gt_valid: jnp.ndarray):
+    """Nearest-cell target assignment (simplified SSD matching).
+
+    Returns (cls_target (H,W,A), box_target (H,W,A,7), pos_mask)."""
+    anch = anchor_grid(cfg, hh, ww)
+    cls_t = jnp.zeros((hh, ww, cfg.n_anchors))
+    box_t = jnp.zeros((hh, ww, cfg.n_anchors, 7))
+    stride_x = (cfg.x_range[1] - cfg.x_range[0]) / ww
+    stride_y = (cfg.y_range[1] - cfg.y_range[0]) / hh
+
+    def place(carry, i):
+        cls_t, box_t = carry
+        b = gt_boxes[i]
+        v = gt_valid[i]
+        xi = jnp.clip(((b[0] - cfg.x_range[0]) / stride_x).astype(jnp.int32),
+                      0, ww - 1)
+        yi = jnp.clip(((b[1] - cfg.y_range[0]) / stride_y).astype(jnp.int32),
+                      0, hh - 1)
+        # Best-yaw anchor: 0 if |sin| < |cos| else 1.
+        ai = (jnp.abs(jnp.sin(b[6])) > jnp.abs(jnp.cos(b[6]))).astype(
+            jnp.int32)
+        a = anch[yi, xi, ai]
+        diag = jnp.hypot(a[3], a[4])
+        delta = jnp.stack([
+            (b[0] - a[0]) / diag, (b[1] - a[1]) / diag,
+            (b[2] - a[2]) / a[5],
+            jnp.log(jnp.maximum(b[3] / a[3], 1e-3)),
+            jnp.log(jnp.maximum(b[4] / a[4], 1e-3)),
+            jnp.log(jnp.maximum(b[5] / a[5], 1e-3)),
+            b[6] - a[6]])
+        cls_t = jnp.where(v, cls_t.at[yi, xi, ai].set(1.0), cls_t)
+        box_t = jnp.where(v, box_t.at[yi, xi, ai].set(delta), box_t)
+        return (cls_t, box_t), None
+
+    (cls_t, box_t), _ = jax.lax.scan(place, (cls_t, box_t),
+                                     jnp.arange(gt_boxes.shape[0]))
+    return cls_t, box_t, cls_t > 0.5
+
+
+def loss_fn(params, cfg: PillarConfig, points, valid, gt_boxes, gt_valid,
+            alpha: float = 0.25, gamma: float = 2.0):
+    """Focal classification + smooth-L1 box regression."""
+    cls, box = forward(params, cfg, points, valid)
+    hh, ww = cls.shape[:2]
+    cls_t, box_t, pos = assign_targets(cfg, hh, ww, gt_boxes, gt_valid)
+    p = jax.nn.sigmoid(cls)
+    pt = jnp.where(cls_t > 0.5, p, 1 - p)
+    af = jnp.where(cls_t > 0.5, alpha, 1 - alpha)
+    focal = -af * (1 - pt) ** gamma * jnp.log(jnp.clip(pt, 1e-7, 1.0))
+    cls_loss = jnp.sum(focal) / jnp.maximum(jnp.sum(pos), 1)
+    diff = jnp.abs(box - box_t)
+    huber = jnp.where(diff < 1.0, 0.5 * diff * diff, diff - 0.5)
+    box_loss = jnp.sum(huber * pos[..., None]) / jnp.maximum(jnp.sum(pos), 1)
+    return cls_loss + 2.0 * box_loss, {"cls": cls_loss, "box": box_loss}
+
+
+def detect(params, cfg: PillarConfig, points, valid, score_thresh=0.3,
+           max_det: int = 32):
+    """Inference: forward + decode + top-k + greedy BEV NMS."""
+    cls, box = forward(params, cfg, points, valid)
+    scores = jax.nn.sigmoid(cls).reshape(-1)
+    boxes = decode_boxes(cfg, box).reshape(-1, 7)
+    top, idx = jax.lax.top_k(scores, max_det * 2)
+    cand = boxes[idx]
+    keep_score = top >= score_thresh
+
+    def nms_body(i, keep):
+        b = cand[i]
+        ious = jax.vmap(lambda c: box_ops.iou_bev(b, c))(cand)
+        earlier = jnp.arange(cand.shape[0]) < i
+        overlap = jnp.any((ious > 0.5) & earlier & keep)
+        return keep.at[i].set(keep_score[i] & ~overlap)
+
+    keep = jnp.zeros((cand.shape[0],), bool)
+    keep = jax.lax.fori_loop(0, cand.shape[0], nms_body, keep)
+    order = jnp.argsort(~keep)
+    out_boxes = cand[order][:max_det]
+    out_valid = keep[order][:max_det]
+    return out_boxes, out_valid

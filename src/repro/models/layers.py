@@ -1,0 +1,475 @@
+"""Shared layer library: norms, RoPE/M-RoPE, attention (GQA/MQA), MLPs, MoE.
+
+Conventions:
+* Every layer is a pair ``<layer>_defs(cfg) -> ParamDef tree`` and
+  ``<layer>_apply(params, ...) -> array``.
+* Parameters are stored fp32 (optimizer-canonical) and cast to the compute
+  dtype at use; matmuls accumulate fp32 via ``preferred_element_type``.
+* Attention uses a chunked online-softmax (flash-style) path for long
+  sequences so 32k-prefill never materializes (S, S) scores; a dense path
+  is used for short sequences. The Pallas TPU kernel in
+  ``repro.kernels.flash_attention`` implements the same contract.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.params import (ParamDef, fanin_init, normal_init, ones_init,
+                                 zeros_init)
+
+_NEG_INF = -1e30
+_DENSE_ATTN_MAX_SEQ = 2048   # dense score path up to this q length
+_Q_CHUNK = 512
+_K_CHUNK = 1024
+
+
+def cast(x, cfg: ArchConfig):
+    return x.astype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def norm_defs(d: int, kind: str):
+    if kind == "rmsnorm":
+        return {"scale": ParamDef((d,), ("embed",), jnp.float32, ones_init())}
+    return {"scale": ParamDef((d,), ("embed",), jnp.float32, ones_init()),
+            "bias": ParamDef((d,), ("embed",), jnp.float32, zeros_init())}
+
+
+def norm_apply(p, x, kind: str, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+
+def _rope_angles(positions: jnp.ndarray, rot_dim: int, theta: float):
+    """positions (...,) -> cos/sin (..., rot_dim/2)."""
+    half = rot_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+               fraction: float = 1.0) -> jnp.ndarray:
+    """x: (B, S, H, hd); positions: (B, S). Rotates the leading
+    ``fraction`` of head dims, half-split convention."""
+    hd = x.shape[-1]
+    rot = int(hd * fraction)
+    rot -= rot % 2
+    cos, sin = _rope_angles(positions, rot, theta)  # (B, S, rot/2)
+    cos = cos[:, :, None, :]
+    sin = sin[:, :, None, :]
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    x1, x2 = jnp.split(x_rot, 2, axis=-1)
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    r1 = xf1 * cos - xf2 * sin
+    r2 = xf2 * cos + xf1 * sin
+    out = jnp.concatenate([r1.astype(x.dtype), r2.astype(x.dtype)], axis=-1)
+    return jnp.concatenate([out, x_pass], axis=-1) if rot < hd else out
+
+
+def apply_mrope(x: jnp.ndarray, positions3: jnp.ndarray, theta: float,
+                sections: tuple) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE. positions3: (3, B, S) (t, h, w) ids.
+
+    The rotary frequency bands are split into ``sections`` (summing to
+    hd/2); each band consumes the corresponding positional stream.
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    # Select per-band positions: (B, S, half)
+    band = jnp.repeat(jnp.arange(3), jnp.asarray(sections),
+                      total_repeat_length=half)          # static sections
+    pos = positions3[band, :, :]                          # (half, B, S)
+    pos = jnp.moveaxis(pos, 0, -1).astype(jnp.float32)    # (B, S, half)
+    ang = pos * freqs
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    r1 = xf1 * cos - xf2 * sin
+    r2 = xf2 * cos + xf1 * sin
+    return jnp.concatenate([r1.astype(x.dtype), r2.astype(x.dtype)], axis=-1)
+
+
+def position_encode(q, k, cfg: ArchConfig, positions):
+    """Dispatch on cfg.pos_embedding for self-attention q/k."""
+    if cfg.pos_embedding == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_fraction)
+        k = apply_rope(k, positions, cfg.rope_theta, cfg.rope_fraction)
+    elif cfg.pos_embedding == "mrope":
+        q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    return q, k
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA / MQA / MHA)
+# ---------------------------------------------------------------------------
+
+
+def attn_defs(cfg: ArchConfig, d_model: Optional[int] = None):
+    d = d_model or cfg.d_model
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    defs = {
+        "wq": ParamDef((d, h, hd), ("embed", "heads", None), init=fanin_init()),
+        "wk": ParamDef((d, kv, hd), ("embed", "kv_heads", None), init=fanin_init()),
+        "wv": ParamDef((d, kv, hd), ("embed", "kv_heads", None), init=fanin_init()),
+        "wo": ParamDef((h, hd, d), ("heads", None, "embed"), init=fanin_init()),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = ParamDef((h, hd), ("heads", None), init=zeros_init())
+        defs["bk"] = ParamDef((kv, hd), ("kv_heads", None), init=zeros_init())
+        defs["bv"] = ParamDef((kv, hd), ("kv_heads", None), init=zeros_init())
+    return defs
+
+
+def _dense_attention(q, k, v, causal: bool, q_offset=0):
+    """q: (B, Sq, KV, G, hd); k/v: (B, Sk, KV, hd). Returns (B, Sq, KV, G, hd)."""
+    hd = q.shape[-1]
+    scale = hd ** -0.5
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if causal:
+        sq, sk = q.shape[1], k.shape[1]
+        qi = jnp.arange(sq)[:, None] + q_offset
+        kj = jnp.arange(sk)[None, :]
+        scores = jnp.where(kj <= qi, scores, _NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bkgqs,bskh->bqkgh", w, v)
+
+
+def _chunked_attention(q, k, v, causal: bool):
+    """Flash-style online softmax over k-chunks, scanned over q-chunks.
+
+    Memory: O(q_chunk * k_chunk) scores instead of O(Sq * Sk).
+    """
+    b, sq, kvh, g, hd = q.shape
+    vd = v.shape[-1]
+    sk = k.shape[1]
+    qc = min(_Q_CHUNK, sq)
+    kc = min(_K_CHUNK, sk)
+    n_q = -(-sq // qc)
+    n_k = -(-sk // kc)
+    pad_q = n_q * qc - sq
+    pad_k = n_k * kc - sk
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    scale = hd ** -0.5
+    k_chunks = kp.reshape(b, n_k, kc, kvh, hd).transpose(1, 0, 2, 3, 4)
+    v_chunks = vp.reshape(b, n_k, kc, kvh, vd).transpose(1, 0, 2, 3, 4)
+    kv_pos = (jnp.arange(n_k * kc)).reshape(n_k, kc)
+
+    @functools.partial(jax.checkpoint, policy=None)
+    def q_block(qi, q_chunk):
+        # q_chunk: (B, qc, KV, G, hd)
+        q_pos = qi * qc + jnp.arange(qc)
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            k_c, v_c, kpos = inp
+            s = jnp.einsum("bqkgh,bskh->bkgqs", q_chunk, k_c,
+                           preferred_element_type=jnp.float32) * scale
+            mask = kpos[None, :] <= q_pos[:, None] if causal else \
+                (kpos[None, :] < sk) & jnp.ones((qc, 1), bool)
+            # Always mask k padding.
+            mask = mask & (kpos[None, :] < sk)
+            s = jnp.where(mask[None, None, None], s, _NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqs,bskh->bkgqh", p.astype(v_c.dtype), v_c,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kvh, g, qc), _NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, qc), jnp.float32)
+        a0 = jnp.zeros((b, kvh, g, qc, vd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      (k_chunks, v_chunks, kv_pos))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out.transpose(0, 3, 1, 2, 4).astype(q.dtype)  # (B, qc, KV, G, hd)
+
+    q_blocks = qp.reshape(b, n_q, qc, kvh, g, hd).transpose(1, 0, 2, 3, 4, 5)
+    outs = jax.lax.map(lambda args: q_block(*args),
+                       (jnp.arange(n_q), q_blocks))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, n_q * qc, kvh, g, vd)
+    return out[:, :sq]
+
+
+def multihead_attention(q, k, v, causal: bool):
+    """q: (B, Sq, H, hd); k: (B, Sk, KV, hd); v: (B, Sk, KV, vd).
+
+    Returns (B, Sq, H, vd) — the value head dim may differ from the qk head
+    dim (MLA)."""
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, hd)
+    if sq <= _DENSE_ATTN_MAX_SEQ and k.shape[1] <= _DENSE_ATTN_MAX_SEQ:
+        out = _dense_attention(qg, k, v, causal)
+    else:
+        out = _chunked_attention(qg, k, v, causal)
+    return out.reshape(b, sq, h, v.shape[-1])
+
+
+def attn_apply(p, x, cfg: ArchConfig, positions, causal: bool = True,
+               kv_x: Optional[jnp.ndarray] = None,
+               rope_on: bool = True):
+    """Full-sequence attention (train / prefill / encoder / cross)."""
+    src = kv_x if kv_x is not None else x
+    q = jnp.einsum("bsd,dhk->bshk", x, cast(p["wq"], cfg),
+                   preferred_element_type=jnp.float32).astype(cfg.dtype)
+    k = jnp.einsum("bsd,dhk->bshk", src, cast(p["wk"], cfg),
+                   preferred_element_type=jnp.float32).astype(cfg.dtype)
+    v = jnp.einsum("bsd,dhk->bshk", src, cast(p["wv"], cfg),
+                   preferred_element_type=jnp.float32).astype(cfg.dtype)
+    if cfg.qkv_bias:
+        q = q + cast(p["bq"], cfg)
+        k = k + cast(p["bk"], cfg)
+        v = v + cast(p["bv"], cfg)
+    if rope_on and kv_x is None:
+        q, k = position_encode(q, k, cfg, positions)
+    out = multihead_attention(q, k, v, causal)
+    return jnp.einsum("bshk,hkd->bsd", out, cast(p["wo"], cfg),
+                      preferred_element_type=jnp.float32).astype(cfg.dtype)
+
+
+def attn_decode_apply(p, x, cfg: ArchConfig, cache_k, cache_v, cache_pos,
+                      positions):
+    """Single-token decode with KV cache.
+
+    x: (B, 1, D); cache_k/v: (B, S_max, KV, hd); cache_pos: (B,) int32
+    current lengths. Returns (out (B, 1, D), cache_k, cache_v).
+    """
+    b = x.shape[0]
+    q = jnp.einsum("bsd,dhk->bshk", x, cast(p["wq"], cfg))
+    k = jnp.einsum("bsd,dhk->bshk", x, cast(p["wk"], cfg))
+    v = jnp.einsum("bsd,dhk->bshk", x, cast(p["wv"], cfg))
+    if cfg.qkv_bias:
+        q = q + cast(p["bq"], cfg)
+        k = k + cast(p["bk"], cfg)
+        v = v + cast(p["bv"], cfg)
+    if cfg.pos_embedding in ("rope", "mrope"):
+        pos = positions  # (B, 1) or (3, B, 1)
+        q, k = position_encode(q, k, cfg, pos)
+    # Scatter the new kv at each request's position.
+    upd = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice(
+        c, n, (i, 0, 0)))
+    cache_k = upd(cache_k, k.astype(cache_k.dtype),
+                  cache_pos.astype(jnp.int32))
+    cache_v = upd(cache_v, v.astype(cache_v.dtype), cache_pos.astype(jnp.int32))
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    g = h // kv
+    qg = q.reshape(b, kv, g, hd)
+    scale = hd ** -0.5
+    s = jnp.einsum("bkgh,bskh->bkgs", qg, cache_k,
+                   preferred_element_type=jnp.float32) * scale
+    smax = cache_k.shape[1]
+    mask = jnp.arange(smax)[None] <= cache_pos[:, None]  # (B, S)
+    s = jnp.where(mask[:, None, None], s, _NEG_INF)
+    w = jax.nn.softmax(s, axis=-1).astype(cfg.dtype)
+    out = jnp.einsum("bkgs,bskh->bkgh", w, cache_v,
+                     preferred_element_type=jnp.float32).astype(cfg.dtype)
+    out = out.reshape(b, 1, h, hd)
+    out = jnp.einsum("bshk,hkd->bsd", out, cast(p["wo"], cfg))
+    return out.astype(cfg.dtype), cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp_defs(cfg: ArchConfig, d_ff: Optional[int] = None,
+             d_model: Optional[int] = None):
+    d = d_model or cfg.d_model
+    f = d_ff or cfg.d_ff
+    if cfg.mlp_type == "swiglu":
+        return {
+            "wi_gate": ParamDef((d, f), ("embed", "mlp"), init=fanin_init()),
+            "wi_up": ParamDef((d, f), ("embed", "mlp"), init=fanin_init()),
+            "wo": ParamDef((f, d), ("mlp", "embed"), init=fanin_init()),
+        }
+    return {
+        "wi": ParamDef((d, f), ("embed", "mlp"), init=fanin_init()),
+        "wo": ParamDef((f, d), ("mlp", "embed"), init=fanin_init()),
+    }
+
+
+def mlp_apply(p, x, cfg: ArchConfig):
+    if cfg.mlp_type == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, cast(p["wi_gate"], cfg),
+                       preferred_element_type=jnp.float32)
+        u = jnp.einsum("bsd,df->bsf", x, cast(p["wi_up"], cfg),
+                       preferred_element_type=jnp.float32)
+        h = (jax.nn.silu(g) * u).astype(cfg.dtype)
+    else:
+        h = jnp.einsum("bsd,df->bsf", x, cast(p["wi"], cfg),
+                       preferred_element_type=jnp.float32)
+        if cfg.mlp_type == "gelu":
+            h = jax.nn.gelu(h).astype(cfg.dtype)
+        else:  # relu2 (nemotron/minitron)
+            h = jnp.square(jax.nn.relu(h)).astype(cfg.dtype)
+    return jnp.einsum("bsf,fd->bsd", h, cast(p["wo"], cfg),
+                      preferred_element_type=jnp.float32).astype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (token-choice top-k, capacity-dropped, EP on "model")
+# ---------------------------------------------------------------------------
+
+
+def moe_defs(cfg: ArchConfig):
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    defs = {
+        "router": ParamDef((d, e), ("embed", None), init=normal_init(0.006)),
+        "w_gate": ParamDef((e, d, f), ("expert", "embed", "expert_mlp"),
+                           init=fanin_init()),
+        "w_up": ParamDef((e, d, f), ("expert", "embed", "expert_mlp"),
+                         init=fanin_init()),
+        "w_down": ParamDef((e, f, d), ("expert", "expert_mlp", "embed"),
+                           init=fanin_init()),
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.moe_d_ff * cfg.n_shared_experts
+        defs["shared"] = {
+            "wi_gate": ParamDef((d, fs), ("embed", "mlp"), init=fanin_init()),
+            "wi_up": ParamDef((d, fs), ("embed", "mlp"), init=fanin_init()),
+            "wo": ParamDef((fs, d), ("mlp", "embed"), init=fanin_init()),
+        }
+    return defs
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _constrain_buf(buf):
+    """Shard the MoE dispatch buffer (E, C, D): experts on the model axis,
+    capacity on the data axis (see params.default_rules['moe_cap'])."""
+    from repro.models.sharding import constrain
+    return constrain(buf, ("expert", "moe_cap", None))
+
+
+def moe_capacity(cfg: ArchConfig, n_tokens: int) -> int:
+    raw = n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts
+    return max(_round_up(int(raw), 128), 128)
+
+
+def moe_apply(p, x, cfg: ArchConfig):
+    """Token-choice top-k MoE with per-slot sequential dispatch.
+
+    x: (B, S, D). Dispatch is done one top-k slot at a time (a k-step
+    ``lax.scan``-free Python loop): peak transient memory is O(T * D) per
+    slot instead of O(T * k * D), and capacity ranks accumulate across
+    slots so drops match the global token-choice semantics.
+    """
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    cap = moe_capacity(cfg, t)
+    xt = x.reshape(t, d)
+    logits = jnp.einsum("td,de->te", xt, cast(p["router"], cfg),
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, k)                    # (T, k)
+    if cfg.router_scale:
+        topw = topw / jnp.maximum(jnp.sum(topw, axis=-1, keepdims=True), 1e-9)
+    topw = topw.astype(cfg.dtype)
+
+    counts = jnp.zeros((e,), jnp.int32)
+    buf = jnp.zeros((e, cap, d), cfg.dtype)
+    slot_meta = []
+    for j in range(k):
+        ej = topi[:, j]                                     # (T,)
+        onehot = jax.nn.one_hot(ej, e, dtype=jnp.int32)     # (T, E)
+        rank = jnp.cumsum(onehot, axis=0) - onehot + counts[None, :]
+        my_rank = jnp.take_along_axis(rank, ej[:, None], axis=1)[:, 0]
+        counts = counts + jnp.sum(onehot, axis=0)
+        keep = my_rank < cap
+        slot = jnp.where(keep, ej * cap + my_rank, e * cap)  # drop -> OOB
+        buf = buf.reshape(e * cap, d).at[slot].set(
+            jnp.where(keep[:, None], xt, 0.0), mode="drop",
+            unique_indices=True).reshape(e, cap, d)
+        buf = _constrain_buf(buf)
+        slot_meta.append((slot, keep))
+
+    # Expert computation: (E, C, D) x (E, D, F) -> SwiGLU -> (E, C, D).
+    # 2-axis-sharded expert weights (expert_mlp -> data) are all-gathered
+    # in bf16 here instead of letting XLA all-reduce fp32 partial sums of
+    # the (E, C, D) buffer per layer: ~0.5 GB vs ~10 GB per MoE layer on
+    # deepseek-v2 (EXPERIMENTS.md §Perf iteration 1).
+    from repro.models.sharding import constrain as _constrain
+    wg = _constrain(cast(p["w_gate"], cfg), ("expert", None, None))
+    wu = _constrain(cast(p["w_up"], cfg), ("expert", None, None))
+    wd = _constrain(cast(p["w_down"], cfg), ("expert", None, None))
+    g = jnp.einsum("ecd,edf->ecf", buf, wg,
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("ecd,edf->ecf", buf, wu,
+                   preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * u).astype(cfg.dtype)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, wd,
+                         preferred_element_type=jnp.float32).astype(cfg.dtype)
+    out_flat = out_buf.reshape(e * cap, d)
+
+    y = jnp.zeros((t, d), cfg.dtype)
+    for j, (slot, keep) in enumerate(slot_meta):
+        gathered = jnp.take(out_flat, jnp.where(keep, slot, 0), axis=0)
+        y = y + jnp.where(keep[:, None], gathered, 0.0) * topw[:, j:j + 1]
+
+    if cfg.n_shared_experts:
+        y = y + mlp_apply(p["shared"], xt[None], cfg)[0]
+    return y.reshape(b, s, d)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embed_defs(cfg: ArchConfig):
+    defs = {"table": ParamDef((cfg.vocab, cfg.d_model), ("vocab", "embed"),
+                              init=normal_init(0.02))}
+    if not cfg.tie_embeddings:
+        defs["unembed"] = ParamDef((cfg.d_model, cfg.vocab),
+                                   ("embed", "vocab"), init=normal_init(0.02))
+    return defs
+
+
+def embed_apply(p, tokens, cfg: ArchConfig):
+    return cast(jnp.take(p["table"], tokens, axis=0), cfg)
+
+
+def unembed_apply(p, x, cfg: ArchConfig):
+    if cfg.tie_embeddings:
+        w = cast(p["table"], cfg).T
+    else:
+        w = cast(p["unembed"], cfg)
+    return jnp.einsum("bsd,dv->bsv", x, w,
+                      preferred_element_type=jnp.float32)

@@ -1,0 +1,269 @@
+"""Model assembly: decoder-only / MoE / SSM / hybrid / encoder-decoder LMs.
+
+Each architecture family is expressed as homogeneous *stacks* of blocks that
+``lax.scan`` over stacked parameters (small HLO, fast compile at 512
+devices), with remat per block. The same parameter trees drive:
+
+* ``forward``       — full-sequence logits (training / prefill)
+* ``loss_fn``       — next-token cross entropy
+* ``init_decode``   — allocate KV/SSM caches
+* ``decode_step``   — single-token serving step updating the caches
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers, mamba2, mla, xlstm
+from repro.models.config import ArchConfig
+from repro.models.params import ParamDef
+from repro.models.sharding import constrain
+
+
+# ---------------------------------------------------------------------------
+# Stacking helpers
+# ---------------------------------------------------------------------------
+
+
+def stack_defs(defs, n: int):
+    """Prepend a ``layers`` axis of size n to every ParamDef in the tree."""
+    def one(d: ParamDef):
+        return ParamDef((n,) + d.shape, ("layers",) + d.logical_axes,
+                        d.dtype, d.init)
+    return jax.tree_util.tree_map(one, defs,
+                                  is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def scan_stack(block_fn, x, stacked_params, remat: bool = True):
+    """Run x through a stack of blocks via lax.scan over stacked params."""
+    fn = jax.checkpoint(block_fn) if remat else block_fn
+
+    def step(h, p):
+        return fn(p, h), None
+
+    out, _ = jax.lax.scan(step, x, stacked_params)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Block definitions per family
+# ---------------------------------------------------------------------------
+
+
+def _attn_block_defs(cfg: ArchConfig, moe: bool):
+    d = {
+        "ln1": layers.norm_defs(cfg.d_model, cfg.norm),
+        "ln2": layers.norm_defs(cfg.d_model, cfg.norm),
+    }
+    if cfg.attn_kind == "mla":
+        d["attn"] = mla.mla_defs(cfg)
+    else:
+        d["attn"] = layers.attn_defs(cfg)
+    if moe:
+        d["moe"] = layers.moe_defs(cfg)
+    else:
+        d["mlp"] = layers.mlp_defs(cfg)
+    return d
+
+
+def _attn_block_apply(p, h, cfg: ArchConfig, positions, moe: bool,
+                      causal: bool = True):
+    x = layers.norm_apply(p["ln1"], h, cfg.norm)
+    if cfg.attn_kind == "mla":
+        a = mla.mla_apply(p["attn"], x, cfg, positions, causal)
+    else:
+        a = layers.attn_apply(p["attn"], x, cfg, positions, causal)
+    h = h + a
+    x = layers.norm_apply(p["ln2"], h, cfg.norm)
+    if moe:
+        f = layers.moe_apply(p["moe"], x, cfg)
+    else:
+        f = layers.mlp_apply(p["mlp"], x, cfg)
+    h = h + f
+    return constrain(h, ("batch", "seq", "embed"))
+
+
+def _mamba_block_defs(cfg: ArchConfig):
+    return {"ln": layers.norm_defs(cfg.d_model, cfg.norm),
+            "mamba": mamba2.mamba_defs(cfg)}
+
+
+def _mamba_block_apply(p, h, cfg: ArchConfig):
+    x = layers.norm_apply(p["ln"], h, cfg.norm)
+    return constrain(h + mamba2.mamba_apply(p["mamba"], x, cfg),
+                     ("batch", "seq", "embed"))
+
+
+# ---------------------------------------------------------------------------
+# Model defs
+# ---------------------------------------------------------------------------
+
+
+def model_defs(cfg: ArchConfig):
+    d: dict = {"embed": layers.embed_defs(cfg),
+               "final_norm": layers.norm_defs(cfg.d_model, cfg.norm)}
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        d["blocks"] = stack_defs(_attn_block_defs(cfg, moe=False), cfg.n_layers)
+    elif fam == "moe":
+        if cfg.first_dense:
+            dense_cfg = dataclasses.replace(cfg, d_ff=cfg.d_ff)
+            d["dense_blocks"] = stack_defs(
+                _attn_block_defs(dense_cfg, moe=False), cfg.first_dense)
+        d["moe_blocks"] = stack_defs(
+            _attn_block_defs(cfg, moe=True), cfg.n_layers - cfg.first_dense)
+    elif fam == "ssm":  # xlstm
+        k = cfg.slstm_every
+        n_groups = cfg.n_layers // k
+        mdefs = {"ln": layers.norm_defs(cfg.d_model, cfg.norm),
+                 "cell": xlstm.mlstm_defs(cfg)}
+        sdefs = {"ln": layers.norm_defs(cfg.d_model, cfg.norm),
+                 "cell": xlstm.slstm_defs(cfg)}
+        d["mlstm_blocks"] = stack_defs(stack_defs(mdefs, k - 1), n_groups)
+        d["slstm_blocks"] = stack_defs(sdefs, n_groups)
+    elif fam == "hybrid":  # zamba2
+        k = cfg.hybrid_attn_every
+        n_groups = cfg.n_layers // k
+        tail = cfg.n_layers - n_groups * k
+        d["mamba_groups"] = stack_defs(
+            stack_defs(_mamba_block_defs(cfg), k), n_groups)
+        if tail:
+            d["mamba_tail"] = stack_defs(_mamba_block_defs(cfg), tail)
+        d["shared_attn"] = _attn_block_defs(cfg, moe=False)  # one shared block
+    elif fam in ("encdec", "audio"):
+        enc_cfg = dataclasses.replace(cfg, n_kv_heads=cfg.n_heads)
+        d["enc_blocks"] = stack_defs(
+            _attn_block_defs(enc_cfg, moe=False), cfg.n_enc_layers)
+        d["enc_final_norm"] = layers.norm_defs(cfg.d_model, cfg.norm)
+        dec = _attn_block_defs(cfg, moe=False)
+        dec["ln_cross"] = layers.norm_defs(cfg.d_model, cfg.norm)
+        dec["cross"] = layers.attn_defs(cfg)
+        d["blocks"] = stack_defs(dec, cfg.n_layers)
+        # Learned encoder positions (whisper-style). Decoder positions use
+        # RoPE — whisper's native learned table caps at 448 tokens, which
+        # cannot express the assigned 32k decode shapes (see DESIGN.md).
+        d["enc_pos"] = ParamDef((cfg.enc_seq, cfg.d_model), (None, "embed"),
+                                dtype=jnp.float32)
+    else:
+        raise ValueError(f"unknown family {fam}")
+    return d
+
+
+def default_positions(cfg: ArchConfig, batch: int, seq: int, offset=0):
+    pos = jnp.arange(seq, dtype=jnp.int32)[None, :] + offset
+    pos = jnp.broadcast_to(pos, (batch, seq))
+    if cfg.pos_embedding == "mrope":
+        return jnp.broadcast_to(pos[None], (3, batch, seq))
+    return pos
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def forward(params, cfg: ArchConfig, tokens=None, embeds=None, positions=None,
+            enc_embeds=None):
+    """Full-sequence logits.
+
+    tokens: (B, S) int32, or embeds: (B, S, D) for stub frontends.
+    enc_embeds: (B, enc_seq, D) for encoder-decoder models (stub frontend).
+    """
+    h = layers.embed_apply(params["embed"], tokens, cfg) if embeds is None \
+        else embeds.astype(cfg.dtype)
+    b, s = h.shape[0], h.shape[1]
+    if positions is None:
+        positions = default_positions(cfg, b, s)
+    h = constrain(h, ("batch", "seq", "embed"))
+    fam = cfg.family
+    remat = cfg.remat == "full"
+
+    if fam in ("dense", "vlm"):
+        body = functools.partial(_attn_block_apply, cfg=cfg,
+                                 positions=positions, moe=False)
+        h = scan_stack(lambda p, x: body(p, x), h, params["blocks"], remat)
+    elif fam == "moe":
+        if cfg.first_dense:
+            body_d = functools.partial(_attn_block_apply, cfg=cfg,
+                                       positions=positions, moe=False)
+            h = scan_stack(lambda p, x: body_d(p, x), h,
+                           params["dense_blocks"], remat)
+        body_m = functools.partial(_attn_block_apply, cfg=cfg,
+                                   positions=positions, moe=True)
+        h = scan_stack(lambda p, x: body_m(p, x), h, params["moe_blocks"],
+                       remat)
+    elif fam == "ssm":
+        def group(ph, gp):
+            def mblock(p, x):
+                xn = layers.norm_apply(p["ln"], x, cfg.norm)
+                y, _ = xlstm.mlstm_apply(p["cell"], xn, cfg)
+                return constrain(x + y, ("batch", "seq", "embed"))
+            ph = scan_stack(mblock, ph, gp["m"], remat)
+            xn = layers.norm_apply(gp["s"]["ln"], ph, cfg.norm)
+            y, _ = xlstm.slstm_apply(gp["s"]["cell"], xn, cfg)
+            return constrain(ph + y, ("batch", "seq", "embed")), None
+
+        h, _ = jax.lax.scan(
+            lambda ph, gp: group(ph, gp), h,
+            {"m": params["mlstm_blocks"], "s": params["slstm_blocks"]})
+    elif fam == "hybrid":
+        shared = params["shared_attn"]
+
+        def hgroup(ph, gp):
+            ph = scan_stack(lambda p, x: _mamba_block_apply(p, x, cfg), ph,
+                            gp, remat)
+            ph = _attn_block_apply(shared, ph, cfg, positions, moe=False)
+            return ph, None
+
+        h, _ = jax.lax.scan(hgroup, h, params["mamba_groups"])
+        if "mamba_tail" in params:
+            h = scan_stack(lambda p, x: _mamba_block_apply(p, x, cfg), h,
+                           params["mamba_tail"], remat)
+    elif fam in ("encdec", "audio"):
+        enc = enc_embeds.astype(cfg.dtype) + \
+            params["enc_pos"][None, :enc_embeds.shape[1]].astype(cfg.dtype)
+        enc_cfg = dataclasses.replace(cfg, n_kv_heads=cfg.n_heads)
+        enc_pos = default_positions(cfg, b, enc.shape[1])
+        body_e = functools.partial(_attn_block_apply, cfg=enc_cfg,
+                                   positions=enc_pos, moe=False, causal=False)
+        enc = scan_stack(lambda p, x: body_e(p, x), enc, params["enc_blocks"],
+                         remat)
+        enc = layers.norm_apply(params["enc_final_norm"], enc, cfg.norm)
+
+        def dec_block(p, x):
+            xn = layers.norm_apply(p["ln1"], x, cfg.norm)
+            x = x + layers.attn_apply(p["attn"], xn, cfg, positions, True)
+            xn = layers.norm_apply(p["ln_cross"], x, cfg.norm)
+            x = x + layers.attn_apply(p["cross"], xn, cfg, positions,
+                                      causal=False, kv_x=enc)
+            xn = layers.norm_apply(p["ln2"], x, cfg.norm)
+            x = x + layers.mlp_apply(p["mlp"], xn, cfg)
+            return constrain(x, ("batch", "seq", "embed"))
+
+        h = scan_stack(dec_block, h, params["blocks"], remat)
+    else:
+        raise ValueError(fam)
+
+    h = layers.norm_apply(params["final_norm"], h, cfg.norm)
+    logits = layers.unembed_apply(params["embed"], h, cfg)
+    # Note: seq deliberately unsharded here — under sequence parallelism
+    # both seq and vocab would claim the model axis.
+    return constrain(logits, ("batch", None, "vocab"))
+
+
+def loss_fn(params, cfg: ArchConfig, batch):
+    """Next-token cross entropy. batch: {tokens, labels[, embeds, enc_embeds]}."""
+    logits = forward(params, cfg, tokens=batch.get("tokens"),
+                     embeds=batch.get("embeds"),
+                     enc_embeds=batch.get("enc_embeds"))
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("mask", jnp.ones_like(labels, jnp.float32))
+    nll = (lse - gold) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)

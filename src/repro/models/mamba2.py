@@ -1,0 +1,198 @@
+"""Mamba2 (SSD) layer for the zamba2 hybrid architecture.
+
+Chunked state-space-dual formulation: a single ``lax.scan`` over sequence
+chunks carries the (B, H, P, N) recurrent state; each step computes the
+intra-chunk quadratic term (L x L per head) and the inter-chunk
+contribution. Peak memory is O(chunk^2 * H) per step instead of O(S^2).
+
+Decode is the one-step recurrence on the same state (O(1) per token) —
+this is what makes ``long_500k`` feasible for SSM/hybrid archs.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.layers import cast, norm_apply, norm_defs
+from repro.models.params import (ParamDef, fanin_init, normal_init, ones_init,
+                                 zeros_init)
+
+_CHUNK = 128
+
+
+def mamba_dims(cfg: ArchConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    return d_inner, n_heads
+
+
+def mamba_defs(cfg: ArchConfig):
+    d = cfg.d_model
+    d_inner, h = mamba_dims(cfg)
+    p_dim = cfg.ssm_head_dim
+    n = cfg.ssm_state
+    cw = cfg.ssm_conv
+    return {
+        "wz": ParamDef((d, h, p_dim), ("embed", "heads", None), init=fanin_init()),
+        "wx": ParamDef((d, h, p_dim), ("embed", "heads", None), init=fanin_init()),
+        "wB": ParamDef((d, n), ("embed", "state"), init=fanin_init()),
+        "wC": ParamDef((d, n), ("embed", "state"), init=fanin_init()),
+        "wdt": ParamDef((d, h), ("embed", "heads"), init=normal_init(0.02)),
+        "dt_bias": ParamDef((h,), ("heads",), init=zeros_init()),
+        "a_log": ParamDef((h,), ("heads",), init=zeros_init()),
+        "d_skip": ParamDef((h,), ("heads",), init=ones_init()),
+        "conv_x": ParamDef((cw, h, p_dim), ("conv", "heads", None),
+                           init=normal_init(0.1)),
+        "conv_b": ParamDef((cw, n), ("conv", "state"), init=normal_init(0.1)),
+        "conv_c": ParamDef((cw, n), ("conv", "state"), init=normal_init(0.1)),
+        "norm": norm_defs(d_inner, "rmsnorm"),
+        "wo": ParamDef((h, p_dim, d), ("heads", None, "embed"),
+                       init=fanin_init()),
+    }
+
+
+class MambaCache(NamedTuple):
+    state: jnp.ndarray    # (B, H, P, N)
+    conv_x: jnp.ndarray   # (B, CW-1, H, P)
+    conv_b: jnp.ndarray   # (B, CW-1, N)
+    conv_c: jnp.ndarray   # (B, CW-1, N)
+
+
+def init_cache(cfg: ArchConfig, batch: int, dtype) -> MambaCache:
+    _, h = mamba_dims(cfg)
+    p_dim, n, cw = cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_conv
+    return MambaCache(
+        state=jnp.zeros((batch, h, p_dim, n), jnp.float32),
+        conv_x=jnp.zeros((batch, cw - 1, h, p_dim), dtype),
+        conv_b=jnp.zeros((batch, cw - 1, n), dtype),
+        conv_c=jnp.zeros((batch, cw - 1, n), dtype),
+    )
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv over the seq axis. x: (B, S, ...), w: (CW, ...)."""
+    cw = w.shape[0]
+    out = jnp.zeros_like(x)
+    for i in range(cw):
+        shift = cw - 1 - i
+        xi = jnp.pad(x, ((0, 0), (shift, 0)) + ((0, 0),) * (x.ndim - 2))
+        out = out + xi[:, :x.shape[1]] * w[i]
+    return out
+
+
+def _ssd_scan(x, dt, a, b_in, c_in, init_state):
+    """Chunked SSD. x: (B,S,H,P), dt: (B,S,H), a: (H,) negative,
+    b_in/c_in: (B,S,N). Returns (y (B,S,H,P), final_state)."""
+    bsz, s, h, p_dim = x.shape
+    n = b_in.shape[-1]
+    l = min(_CHUNK, s)
+    nc = -(-s // l)
+    pad = nc * l - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_in = jnp.pad(b_in, ((0, 0), (0, pad), (0, 0)))
+        c_in = jnp.pad(c_in, ((0, 0), (0, pad), (0, 0)))
+    xc = x.reshape(bsz, nc, l, h, p_dim).transpose(1, 0, 2, 3, 4)
+    dtc = dt.reshape(bsz, nc, l, h).transpose(1, 0, 2, 3)
+    bc = b_in.reshape(bsz, nc, l, n).transpose(1, 0, 2, 3)
+    cc = c_in.reshape(bsz, nc, l, n).transpose(1, 0, 2, 3)
+    tril = jnp.tril(jnp.ones((l, l), bool))
+
+    def step(state, inp):
+        x_c, dt_c, b_c, c_c = inp                    # (B,L,H,P) etc.
+        da = dt_c.astype(jnp.float32) * a            # (B,L,H) negative
+        cum = jnp.cumsum(da, axis=1)                 # (B,L,H)
+        total = cum[:, -1]                           # (B,H)
+        # Inter-chunk: previous state decayed to each position.
+        y_prev = jnp.einsum("bln,bhpn->blhp", c_c.astype(jnp.float32), state) \
+            * jnp.exp(cum)[..., None]
+        # Intra-chunk: masked pairwise decay.
+        diff = cum[:, :, None, :] - cum[:, None, :, :]       # (B,L,M,H)
+        diff = jnp.where(tril[None, :, :, None], diff, -jnp.inf)
+        decay_lm = jnp.exp(diff)
+        cb = jnp.einsum("bln,bmn->blm", c_c.astype(jnp.float32),
+                        b_c.astype(jnp.float32))
+        y_intra = jnp.einsum("blm,blmh,bmh,bmhp->blhp", cb, decay_lm,
+                             dt_c.astype(jnp.float32), x_c.astype(jnp.float32))
+        # State update.
+        dec_to_end = jnp.exp(total[:, None] - cum)           # (B,L,H)
+        s_add = jnp.einsum("bln,blh,blhp->bhpn", b_c.astype(jnp.float32),
+                           dec_to_end * dt_c.astype(jnp.float32),
+                           x_c.astype(jnp.float32))
+        state_new = state * jnp.exp(total)[:, :, None, None] + s_add
+        return state_new, (y_prev + y_intra).astype(x.dtype)
+
+    final, y = jax.lax.scan(step, init_state, (xc, dtc, bc, cc))
+    y = y.transpose(1, 0, 2, 3, 4).reshape(bsz, nc * l, h, p_dim)
+    return y[:, :s], final
+
+
+def mamba_apply(p, x, cfg: ArchConfig, init_state=None):
+    """Full-sequence Mamba2 block. x: (B, S, D) -> (B, S, D)."""
+    bsz, s, _ = x.shape
+    d_inner, h = mamba_dims(cfg)
+    p_dim, n = cfg.ssm_head_dim, cfg.ssm_state
+    z = jnp.einsum("bsd,dhp->bshp", x, cast(p["wz"], cfg),
+                   preferred_element_type=jnp.float32).astype(cfg.dtype)
+    xs = jnp.einsum("bsd,dhp->bshp", x, cast(p["wx"], cfg),
+                    preferred_element_type=jnp.float32).astype(cfg.dtype)
+    b_in = jnp.einsum("bsd,dn->bsn", x, cast(p["wB"], cfg),
+                      preferred_element_type=jnp.float32).astype(cfg.dtype)
+    c_in = jnp.einsum("bsd,dn->bsn", x, cast(p["wC"], cfg),
+                      preferred_element_type=jnp.float32).astype(cfg.dtype)
+    dt = jnp.einsum("bsd,dh->bsh", x, cast(p["wdt"], cfg),
+                    preferred_element_type=jnp.float32)
+    dt = jax.nn.softplus(dt + p["dt_bias"])
+    xs = jax.nn.silu(_causal_conv(xs, cast(p["conv_x"], cfg)))
+    b_in = jax.nn.silu(_causal_conv(b_in, cast(p["conv_b"], cfg)))
+    c_in = jax.nn.silu(_causal_conv(c_in, cast(p["conv_c"], cfg)))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    state0 = init_state if init_state is not None else \
+        jnp.zeros((bsz, h, p_dim, n), jnp.float32)
+    y, _ = _ssd_scan(xs, dt, a, b_in, c_in, state0)
+    y = y + xs * p["d_skip"].astype(cfg.dtype)[None, None, :, None]
+    y = norm_apply(p["norm"], y.reshape(bsz, s, d_inner), "rmsnorm")
+    y = y.reshape(bsz, s, h, p_dim) * jax.nn.silu(z)
+    return jnp.einsum("bshp,hpd->bsd", y, cast(p["wo"], cfg),
+                      preferred_element_type=jnp.float32).astype(cfg.dtype)
+
+
+def mamba_decode_apply(p, x, cfg: ArchConfig, cache: MambaCache):
+    """One-token decode. x: (B, 1, D). Returns (out, new_cache)."""
+    bsz = x.shape[0]
+    d_inner, h = mamba_dims(cfg)
+    p_dim, n = cfg.ssm_head_dim, cfg.ssm_state
+    z = jnp.einsum("bsd,dhp->bshp", x, cast(p["wz"], cfg)).astype(cfg.dtype)
+    xs = jnp.einsum("bsd,dhp->bshp", x, cast(p["wx"], cfg)).astype(cfg.dtype)
+    b_in = jnp.einsum("bsd,dn->bsn", x, cast(p["wB"], cfg)).astype(cfg.dtype)
+    c_in = jnp.einsum("bsd,dn->bsn", x, cast(p["wC"], cfg)).astype(cfg.dtype)
+    dt = jnp.einsum("bsd,dh->bsh", x, cast(p["wdt"], cfg),
+                    preferred_element_type=jnp.float32)
+    dt = jax.nn.softplus(dt + p["dt_bias"])[:, 0]            # (B, H)
+
+    def conv_step(prev, new, w):
+        # prev: (B, CW-1, ...); new: (B, ...); w: (CW, ...)
+        hist = jnp.concatenate([prev, new[:, None]], axis=1)  # (B, CW, ...)
+        out = jnp.sum(hist * w[None], axis=1)
+        return jax.nn.silu(out), hist[:, 1:]
+
+    xs1, conv_x = conv_step(cache.conv_x, xs[:, 0], cast(p["conv_x"], cfg))
+    b1, conv_b = conv_step(cache.conv_b, b_in[:, 0], cast(p["conv_b"], cfg))
+    c1, conv_c = conv_step(cache.conv_c, c_in[:, 0], cast(p["conv_c"], cfg))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    da = jnp.exp(dt * a)                                      # (B, H)
+    s_new = cache.state * da[:, :, None, None] + jnp.einsum(
+        "bn,bh,bhp->bhpn", b1.astype(jnp.float32), dt,
+        xs1.astype(jnp.float32))
+    y = jnp.einsum("bn,bhpn->bhp", c1.astype(jnp.float32), s_new)
+    y = y.astype(cfg.dtype) + xs1 * p["d_skip"].astype(cfg.dtype)[None, :, None]
+    y = norm_apply(p["norm"], y.reshape(bsz, d_inner), "rmsnorm")
+    y = y.reshape(bsz, h, p_dim) * jax.nn.silu(z[:, 0])
+    out = jnp.einsum("bhp,hpd->bd", y, cast(p["wo"], cfg)).astype(cfg.dtype)
+    new_cache = MambaCache(state=s_new, conv_x=conv_x, conv_b=conv_b,
+                           conv_c=conv_c)
+    return out[:, None], new_cache

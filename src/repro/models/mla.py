@@ -1,0 +1,131 @@
+"""Multi-head Latent Attention (DeepSeek-V2) with compressed KV cache.
+
+Training/prefill expands the latent ``c_kv`` into per-head keys/values;
+decode uses the *absorbed* formulation: the query is projected into the
+latent space so attention runs directly against the (kv_lora + rope_dim)
+compressed cache — the memory win that makes 128-head/500k-cache decoding
+feasible.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.layers import (_DENSE_ATTN_MAX_SEQ, _NEG_INF, apply_rope,
+                                 cast, multihead_attention, norm_apply,
+                                 norm_defs)
+from repro.models.params import ParamDef, fanin_init
+
+
+def mla_defs(cfg: ArchConfig):
+    d = cfg.d_model
+    h = cfg.n_heads
+    nope, rope = cfg.qk_nope_dim, cfg.qk_rope_dim
+    vdim = cfg.v_head_dim
+    defs = {
+        "wkv_a": ParamDef((d, cfg.kv_lora + rope), ("embed", "kv_lora"),
+                          init=fanin_init()),
+        "kv_norm": norm_defs(cfg.kv_lora, "rmsnorm"),
+        "wk_b": ParamDef((cfg.kv_lora, h, nope), ("kv_lora", "heads", None),
+                         init=fanin_init()),
+        "wv_b": ParamDef((cfg.kv_lora, h, vdim), ("kv_lora", "heads", None),
+                         init=fanin_init()),
+        "wo": ParamDef((h, vdim, d), ("heads", None, "embed"),
+                       init=fanin_init()),
+    }
+    if cfg.q_lora:
+        defs["wq_a"] = ParamDef((d, cfg.q_lora), ("embed", "q_lora"),
+                                init=fanin_init())
+        defs["q_norm"] = norm_defs(cfg.q_lora, "rmsnorm")
+        defs["wq_b"] = ParamDef((cfg.q_lora, h, nope + rope),
+                                ("q_lora", "heads", None), init=fanin_init())
+    else:
+        defs["wq"] = ParamDef((d, h, nope + rope), ("embed", "heads", None),
+                              init=fanin_init())
+    return defs
+
+
+def _queries(p, x, cfg: ArchConfig):
+    if cfg.q_lora:
+        cq = jnp.einsum("bsd,dr->bsr", x, cast(p["wq_a"], cfg),
+                        preferred_element_type=jnp.float32).astype(cfg.dtype)
+        cq = norm_apply(p["q_norm"], cq, "rmsnorm")
+        q = jnp.einsum("bsr,rhk->bshk", cq, cast(p["wq_b"], cfg),
+                       preferred_element_type=jnp.float32).astype(cfg.dtype)
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, cast(p["wq"], cfg),
+                       preferred_element_type=jnp.float32).astype(cfg.dtype)
+    return q
+
+
+def _latent_kv(p, x, cfg: ArchConfig, positions):
+    """Compressed kv: returns (c_kv (B,S,kv_lora), k_rope (B,S,1,rope))."""
+    kv = jnp.einsum("bsd,dr->bsr", x, cast(p["wkv_a"], cfg),
+                    preferred_element_type=jnp.float32).astype(cfg.dtype)
+    c_kv, k_rope = kv[..., :cfg.kv_lora], kv[..., cfg.kv_lora:]
+    c_kv = norm_apply(p["kv_norm"], c_kv, "rmsnorm")
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)
+    return c_kv, k_rope
+
+
+def mla_apply(p, x, cfg: ArchConfig, positions, causal: bool = True):
+    """Full-sequence MLA (train / prefill)."""
+    nope, rope = cfg.qk_nope_dim, cfg.qk_rope_dim
+    q = _queries(p, x, cfg)                                  # (B,S,H,nope+rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    c_kv, k_rope = _latent_kv(p, x, cfg, positions)
+    # Expand latent to per-head keys/values.
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, cast(p["wk_b"], cfg),
+                        preferred_element_type=jnp.float32).astype(cfg.dtype)
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, cast(p["wv_b"], cfg),
+                   preferred_element_type=jnp.float32).astype(cfg.dtype)
+    h = cfg.n_heads
+    k_rope_b = jnp.broadcast_to(k_rope, k_rope.shape[:2] + (h, rope))
+    qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+    kf = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    out = multihead_attention(qf, kf, v, causal)             # KV == H heads
+    return jnp.einsum("bshk,hkd->bsd", out, cast(p["wo"], cfg),
+                      preferred_element_type=jnp.float32).astype(cfg.dtype)
+
+
+def mla_decode_apply(p, x, cfg: ArchConfig, cache_ckv, cache_krope, cache_pos,
+                     positions):
+    """Absorbed-matrix decode against the compressed cache.
+
+    x: (B, 1, D); cache_ckv: (B, S_max, kv_lora); cache_krope:
+    (B, S_max, rope); cache_pos: (B,). Returns (out, cache_ckv, cache_krope).
+    """
+    b = x.shape[0]
+    nope, rope = cfg.qk_nope_dim, cfg.qk_rope_dim
+    q = _queries(p, x, cfg)[:, 0]                            # (B,H,nope+rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope[:, None], positions, cfg.rope_theta)[:, 0]
+    c_kv, k_rope = _latent_kv(p, x, cfg, positions)
+    upd2 = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice(c, n, (i, 0)))
+    cache_ckv = upd2(cache_ckv, c_kv[:, 0:1].astype(cache_ckv.dtype),
+                     cache_pos.astype(jnp.int32))
+    cache_krope = upd2(cache_krope, k_rope[:, 0, 0:1].astype(cache_krope.dtype),
+                       cache_pos.astype(jnp.int32))
+    # Absorb wk_b into the query: q_lat (B, H, kv_lora).
+    q_lat = jnp.einsum("bhk,rhk->bhr", q_nope, cast(p["wk_b"], cfg),
+                       preferred_element_type=jnp.float32).astype(cfg.dtype)
+    scale = (nope + rope) ** -0.5
+    s = (jnp.einsum("bhr,bsr->bhs", q_lat, cache_ckv,
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bhk,bsk->bhs", q_rope, cache_krope,
+                      preferred_element_type=jnp.float32)) * scale
+    smax = cache_ckv.shape[1]
+    mask = jnp.arange(smax)[None] <= cache_pos[:, None]
+    s = jnp.where(mask[:, None], s, _NEG_INF)
+    w = jax.nn.softmax(s, axis=-1).astype(cfg.dtype)
+    o_lat = jnp.einsum("bhs,bsr->bhr", w, cache_ckv,
+                       preferred_element_type=jnp.float32).astype(cfg.dtype)
+    o = jnp.einsum("bhr,rhk->bhk", o_lat, cast(p["wv_b"], cfg),
+                   preferred_element_type=jnp.float32).astype(cfg.dtype)
+    out = jnp.einsum("bhk,hkd->bd", o, cast(p["wo"], cfg),
+                     preferred_element_type=jnp.float32).astype(cfg.dtype)
+    return out[:, None], cache_ckv, cache_krope

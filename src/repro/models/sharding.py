@@ -1,0 +1,40 @@
+"""Activation-sharding hooks.
+
+Model code calls :func:`constrain` with *logical* axis names; the launcher
+installs a rules table (logical -> mesh axis) before tracing. Without an
+installed table the hook is the identity, so models run unmodified on a
+single device (tests, smoke runs).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+
+def current_rules():
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def activation_rules(rules: dict):
+    prev = current_rules()
+    _state.rules = rules
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def constrain(x, logical_axes: tuple):
+    """Apply a sharding constraint by logical axis names (None = unsharded)."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    spec = P(*[rules.get(a, None) if a is not None else None
+               for a in logical_axes])
+    return jax.lax.with_sharding_constraint(x, spec)

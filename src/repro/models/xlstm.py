@@ -1,0 +1,252 @@
+"""xLSTM blocks: chunkwise-parallel mLSTM and sequential sLSTM.
+
+mLSTM (matrix memory, exponential gating with max-stabilizer) is computed
+chunkwise — a ``lax.scan`` over sequence chunks carrying (C, n, m) — so
+prefill never materializes (S, S) score matrices. sLSTM (scalar memory with
+recurrent block-diagonal weights) is inherently sequential and scans over
+time steps. Decode for both is the O(1) single-step recurrence.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.layers import cast, norm_apply, norm_defs
+from repro.models.params import ParamDef, fanin_init, normal_init, zeros_init
+
+_CHUNK = 128
+_NEG = -1e30
+
+
+def mlstm_dims(cfg: ArchConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    p = d_inner // cfg.n_heads
+    return d_inner, cfg.n_heads, p
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_defs(cfg: ArchConfig):
+    d = cfg.d_model
+    d_inner, h, p = mlstm_dims(cfg)
+    return {
+        "w_up": ParamDef((d, h, p), ("embed", "heads", None), init=fanin_init()),
+        "w_gate": ParamDef((d, h, p), ("embed", "heads", None), init=fanin_init()),
+        "wq": ParamDef((h, p, p), ("heads", None, None), init=fanin_init()),
+        "wk": ParamDef((h, p, p), ("heads", None, None), init=fanin_init()),
+        "wv": ParamDef((h, p, p), ("heads", None, None), init=fanin_init()),
+        "w_i": ParamDef((d, h), ("embed", "heads"), init=normal_init(0.02)),
+        "w_f": ParamDef((d, h), ("embed", "heads"), init=normal_init(0.02)),
+        "b_i": ParamDef((h,), ("heads",), init=zeros_init()),
+        "b_f": ParamDef((h,), ("heads",), init=_f_bias_init()),
+        "norm": norm_defs(d_inner, "rmsnorm"),
+        "wo": ParamDef((h, p, d), ("heads", None, "embed"), init=fanin_init()),
+    }
+
+
+def _f_bias_init():
+    def init(key, shape, dtype):
+        return jnp.full(shape, 3.0, dtype)  # forget gate starts ~open
+    return init
+
+
+class MlstmCache(NamedTuple):
+    c: jnp.ndarray   # (B, H, P, P) matrix memory
+    n: jnp.ndarray   # (B, H, P) normalizer
+    m: jnp.ndarray   # (B, H) stabilizer
+
+
+def mlstm_init_cache(cfg: ArchConfig, batch: int) -> MlstmCache:
+    _, h, p = mlstm_dims(cfg)
+    return MlstmCache(c=jnp.zeros((batch, h, p, p), jnp.float32),
+                      n=jnp.zeros((batch, h, p), jnp.float32),
+                      m=jnp.full((batch, h), _NEG, jnp.float32))
+
+
+def _mlstm_chunk_scan(q, k, v, log_i, log_f, cache: MlstmCache):
+    """q/k/v: (B,S,H,P); log_i/log_f: (B,S,H). Returns (y, cache)."""
+    bsz, s, h, p = q.shape
+    l = min(_CHUNK, s)
+    nc = -(-s // l)
+    pad = nc * l - s
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=_NEG)
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))
+    chunks = lambda x: x.reshape((bsz, nc, l) + x.shape[2:]).transpose(
+        (1, 0, 2) + tuple(range(3, x.ndim + 1)))
+    qc, kc, vc = chunks(q), chunks(k), chunks(v)
+    lic, lfc = chunks(log_i), chunks(log_f)
+    tril = jnp.tril(jnp.ones((l, l), bool))
+    scale = p ** -0.5
+
+    def step(carry, inp):
+        c_prev, n_prev, m_prev = carry
+        q_c, k_c, v_c, li, lf = inp
+        qf = q_c.astype(jnp.float32)
+        kf = k_c.astype(jnp.float32)
+        vf = v_c.astype(jnp.float32)
+        cum_f = jnp.cumsum(lf, axis=1)                  # (B,L,H)
+        total = cum_f[:, -1]                            # (B,H)
+        # log decay D[l,m] = cumF[l] - cumF[m] + log_i[m], m <= l.
+        dmat = cum_f[:, :, None, :] - cum_f[:, None, :, :] + li[:, None, :, :]
+        dmat = jnp.where(tril[None, :, :, None], dmat, _NEG)
+        inter_log = cum_f + m_prev[:, None, :]          # (B,L,H)
+        m_row = jnp.maximum(jnp.max(dmat, axis=2), inter_log)  # (B,L,H)
+        s_mat = jnp.exp(dmat - m_row[:, :, None, :])
+        att = jnp.einsum("blhp,bmhp->blmh", qf, kf) * scale
+        num_intra = jnp.einsum("blmh,blmh,bmhp->blhp", s_mat, att, vf)
+        w_inter = jnp.exp(inter_log - m_row)            # (B,L,H)
+        num_inter = jnp.einsum("blhp,bhpv->blhv", qf, c_prev) * \
+            w_inter[..., None] * scale
+        den_intra = jnp.einsum("blmh,blmh->blh", s_mat, att)
+        den_inter = jnp.einsum("blhp,bhp->blh", qf, n_prev) * w_inter * scale
+        num = num_intra + num_inter
+        den = den_intra + den_inter
+        y = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_row))[..., None]
+        # Chunk-end state update.
+        g = total[:, None, :] - cum_f + li              # (B,L,H)
+        m_new = jnp.maximum(m_prev + total, jnp.max(g, axis=1))
+        w_c = jnp.exp(g - m_new[:, None, :])
+        c_new = c_prev * jnp.exp(m_prev + total - m_new)[..., None, None] + \
+            jnp.einsum("blh,blhp,blhv->bhpv", w_c, kf, vf)
+        n_new = n_prev * jnp.exp(m_prev + total - m_new)[..., None] + \
+            jnp.einsum("blh,blhp->bhp", w_c, kf)
+        return (c_new, n_new, m_new), y.astype(q.dtype)
+
+    (c, n, m), y = jax.lax.scan(step, (cache.c, cache.n, cache.m),
+                                (qc, kc, vc, lic, lfc))
+    y = y.transpose(1, 0, 2, 3, 4).reshape(bsz, nc * l, h, p)
+    return y[:, :s], MlstmCache(c=c, n=n, m=m)
+
+
+def mlstm_apply(p_, x, cfg: ArchConfig, cache=None):
+    """Full-sequence mLSTM block. x: (B, S, D)."""
+    bsz, s, d = x.shape
+    d_inner, h, p = mlstm_dims(cfg)
+    up = jnp.einsum("bsd,dhp->bshp", x, cast(p_["w_up"], cfg),
+                    preferred_element_type=jnp.float32).astype(cfg.dtype)
+    gate = jnp.einsum("bsd,dhp->bshp", x, cast(p_["w_gate"], cfg),
+                      preferred_element_type=jnp.float32).astype(cfg.dtype)
+    q = jnp.einsum("bshp,hpq->bshq", up, cast(p_["wq"], cfg),
+                   preferred_element_type=jnp.float32).astype(cfg.dtype)
+    k = jnp.einsum("bshp,hpq->bshq", up, cast(p_["wk"], cfg),
+                   preferred_element_type=jnp.float32).astype(cfg.dtype)
+    v = jnp.einsum("bshp,hpq->bshq", up, cast(p_["wv"], cfg),
+                   preferred_element_type=jnp.float32).astype(cfg.dtype)
+    log_i = jnp.einsum("bsd,dh->bsh", x, cast(p_["w_i"], cfg),
+                       preferred_element_type=jnp.float32) + p_["b_i"]
+    log_f = jax.nn.log_sigmoid(
+        jnp.einsum("bsd,dh->bsh", x, cast(p_["w_f"], cfg),
+                   preferred_element_type=jnp.float32) + p_["b_f"])
+    cache = cache or mlstm_init_cache(cfg, bsz)
+    y, new_cache = _mlstm_chunk_scan(q, k, v, log_i, log_f, cache)
+    y = norm_apply(p_["norm"], y.reshape(bsz, s, d_inner), "rmsnorm")
+    y = y.reshape(bsz, s, h, p) * jax.nn.silu(gate)
+    out = jnp.einsum("bshp,hpd->bsd", y, cast(p_["wo"], cfg),
+                     preferred_element_type=jnp.float32).astype(cfg.dtype)
+    return out, new_cache
+
+
+def mlstm_decode_apply(p_, x, cfg: ArchConfig, cache: MlstmCache):
+    """One-token mLSTM step. x: (B, 1, D)."""
+    out, new_cache = mlstm_apply(p_, x, cfg, cache)
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_defs(cfg: ArchConfig):
+    d = cfg.d_model
+    h = cfg.n_heads
+    p = d // h
+    gate = lambda: ParamDef((d, h, p), ("embed", "heads", None),
+                            init=fanin_init())
+    rec = lambda: ParamDef((h, p, p), ("heads", None, None),
+                           init=normal_init(0.02))
+    return {
+        "w_i": gate(), "w_f": gate(), "w_z": gate(), "w_o": gate(),
+        "r_i": rec(), "r_f": rec(), "r_z": rec(), "r_o": rec(),
+        "b_i": ParamDef((h, p), ("heads", None), init=zeros_init()),
+        "b_f": ParamDef((h, p), ("heads", None), init=_f_bias_init()),
+        "b_z": ParamDef((h, p), ("heads", None), init=zeros_init()),
+        "b_o": ParamDef((h, p), ("heads", None), init=zeros_init()),
+        "norm": norm_defs(d, "rmsnorm"),
+        "wo": ParamDef((h, p, d), ("heads", None, "embed"), init=fanin_init()),
+    }
+
+
+class SlstmCache(NamedTuple):
+    c: jnp.ndarray   # (B, H, P)
+    n: jnp.ndarray   # (B, H, P)
+    m: jnp.ndarray   # (B, H, P)
+    h: jnp.ndarray   # (B, H, P) previous output (recurrent input)
+
+
+def slstm_init_cache(cfg: ArchConfig, batch: int) -> SlstmCache:
+    h = cfg.n_heads
+    p = cfg.d_model // h
+    z = lambda: jnp.zeros((batch, h, p), jnp.float32)
+    return SlstmCache(c=z(), n=z(), m=jnp.full((batch, h, p), _NEG,
+                                               jnp.float32), h=z())
+
+
+def _slstm_cell(p_, cfg, pre_i, pre_f, pre_z, pre_o, cache: SlstmCache):
+    """One time step. pre_*: (B, H, P) fp32 pre-activations (input part)."""
+    rec = lambda name: jnp.einsum(
+        "bhp,hpq->bhq", cache.h, p_[name].astype(jnp.float32))
+    pi = pre_i + rec("r_i") + p_["b_i"]
+    pf = pre_f + rec("r_f") + p_["b_f"]
+    pz = pre_z + rec("r_z") + p_["b_z"]
+    po = pre_o + rec("r_o") + p_["b_o"]
+    log_f = jax.nn.log_sigmoid(pf)
+    m_new = jnp.maximum(log_f + cache.m, pi)
+    i_s = jnp.exp(pi - m_new)
+    f_s = jnp.exp(log_f + cache.m - m_new)
+    c_new = f_s * cache.c + i_s * jnp.tanh(pz)
+    n_new = f_s * cache.n + i_s
+    h_new = jax.nn.sigmoid(po) * c_new / jnp.maximum(n_new, 1e-6)
+    return SlstmCache(c=c_new, n=n_new, m=m_new, h=h_new)
+
+
+def slstm_apply(p_, x, cfg: ArchConfig, cache=None):
+    """Sequential sLSTM block. x: (B, S, D)."""
+    bsz, s, d = x.shape
+    h = cfg.n_heads
+    p = d // h
+    pre = lambda name: jnp.einsum(
+        "bsd,dhp->bshp", x, cast(p_[name], cfg),
+        preferred_element_type=jnp.float32)
+    pi, pf, pz, po = pre("w_i"), pre("w_f"), pre("w_z"), pre("w_o")
+    cache = cache or slstm_init_cache(cfg, bsz)
+
+    def step(carry, inp):
+        new = _slstm_cell(p_, cfg, *inp, carry)
+        return new, new.h
+
+    xs = (pi.transpose(1, 0, 2, 3), pf.transpose(1, 0, 2, 3),
+          pz.transpose(1, 0, 2, 3), po.transpose(1, 0, 2, 3))
+    cache, ys = jax.lax.scan(step, cache, xs)
+    y = ys.transpose(1, 0, 2, 3).astype(cfg.dtype)       # (B, S, H, P)
+    y = norm_apply(p_["norm"], y.reshape(bsz, s, d), "rmsnorm")
+    y = y.reshape(bsz, s, h, p)
+    out = jnp.einsum("bshp,hpd->bsd", y, cast(p_["wo"], cfg),
+                     preferred_element_type=jnp.float32).astype(cfg.dtype)
+    return out, cache
+
+
+def slstm_decode_apply(p_, x, cfg: ArchConfig, cache: SlstmCache):
+    out, new_cache = slstm_apply(p_, x, cfg, cache)
+    return out, new_cache

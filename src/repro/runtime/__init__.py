@@ -1,0 +1,1 @@
+"""Distributed runtime: netsim, cost model, checkpointing, fault tolerance."""

@@ -1,0 +1,172 @@
+"""Fault-tolerant checkpointing: sharded, atomic, async, elastic-restorable.
+
+Layout (one step):
+    <dir>/step_000010.tmp/            — staging (atomic rename at the end)
+    <dir>/step_000010/
+        manifest.json                 — tree structure, shapes, dtypes, step
+        shard_00000.npz.zst           — flattened leaves, chunked by bytes
+
+Design points for 1000+ node deployments (simulated single-host here):
+* atomic publish: writers stage into ``.tmp`` and ``os.replace`` — a crash
+  mid-save never corrupts the latest checkpoint;
+* async save: ``save_async`` snapshots device arrays to host, then writes
+  on a background thread so the train loop keeps stepping;
+* elastic restore: the manifest is mesh-agnostic (full logical arrays), so
+  a restart on a different mesh/process count reshards transparently —
+  combined with ``fault.ElasticMesh`` this is the node-failure story;
+* integrity: per-shard crc32 recorded in the manifest and checked on load.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import threading
+import zlib
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+try:
+    import zstandard as zstd
+except ImportError:  # pragma: no cover
+    zstd = None
+
+_SHARD_BYTES = 256 * 1024 * 1024
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._pending: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, tree: Any):
+        """Synchronous sharded save with atomic publish."""
+        host_leaves = [np.asarray(l) for l in jax.tree_util.tree_leaves(tree)]
+        self._write(step, tree, host_leaves)
+
+    def save_async(self, step: int, tree: Any):
+        """Snapshot to host now; write in the background."""
+        self.wait()
+        host_leaves = [np.asarray(l) for l in jax.tree_util.tree_leaves(tree)]
+
+        def work():
+            self._write(step, tree, host_leaves)
+
+        self._pending = threading.Thread(target=work, daemon=True)
+        self._pending.start()
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    # ------------------------------------------------------------------
+    def _write(self, step: int, tree: Any, host_leaves):
+        name = f"step_{step:08d}"
+        tmp = os.path.join(self.dir, name + ".tmp")
+        final = os.path.join(self.dir, name)
+        os.makedirs(tmp, exist_ok=True)
+        treedef = jax.tree_util.tree_structure(tree)
+        shards, cur, cur_bytes = [], [], 0
+        for i, leaf in enumerate(host_leaves):
+            cur.append((i, leaf))
+            cur_bytes += leaf.nbytes
+            if cur_bytes >= _SHARD_BYTES:
+                shards.append(cur)
+                cur, cur_bytes = [], 0
+        if cur:
+            shards.append(cur)
+        manifest = {
+            "step": step,
+            "treedef": str(treedef),
+            "leaves": [{"shape": list(l.shape), "dtype": str(l.dtype)}
+                       for l in host_leaves],
+            "shards": [],
+        }
+        for si, shard in enumerate(shards):
+            fname = f"shard_{si:05d}.npz.zst" if zstd else f"shard_{si:05d}.npz"
+            path = os.path.join(tmp, fname)
+            import io
+            buf = io.BytesIO()
+            np.savez(buf, **{f"leaf_{i}": l for i, l in shard})
+            raw = buf.getvalue()
+            if zstd:
+                raw = zstd.ZstdCompressor(level=3).compress(raw)
+            with open(path, "wb") as f:
+                f.write(raw)
+            manifest["shards"].append(
+                {"file": fname, "leaves": [i for i, _ in shard],
+                 "crc32": zlib.crc32(raw) & 0xFFFFFFFF})
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            import shutil
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        self._gc()
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            import shutil
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def all_steps(self):
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                out.append(int(d[5:]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: Optional[int], like: Any,
+                shardings: Any = None) -> Any:
+        """Restore into the structure of ``like``. ``shardings`` (optional
+        pytree of NamedSharding) reshards onto the *current* mesh — this is
+        what makes restarts elastic."""
+        if step is None:
+            step = self.latest_step()
+        assert step is not None, "no checkpoint found"
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        n_leaves = len(manifest["leaves"])
+        host = [None] * n_leaves
+        for shard in manifest["shards"]:
+            with open(os.path.join(path, shard["file"]), "rb") as f:
+                raw = f.read()
+            assert (zlib.crc32(raw) & 0xFFFFFFFF) == shard["crc32"], \
+                f"corrupt shard {shard['file']}"
+            if shard["file"].endswith(".zst"):
+                raw = zstd.ZstdDecompressor().decompress(raw)
+            import io
+            data = np.load(io.BytesIO(raw))
+            for i in shard["leaves"]:
+                host[i] = data[f"leaf_{i}"]
+        leaves, treedef = jax.tree_util.tree_flatten(like)
+        assert len(leaves) == n_leaves, \
+            f"tree mismatch: {len(leaves)} vs {n_leaves}"
+        out = []
+        shard_leaves = (jax.tree_util.tree_leaves(shardings)
+                        if shardings is not None else [None] * n_leaves)
+        for tgt, val, shd in zip(leaves, host, shard_leaves):
+            arr = val.astype(tgt.dtype) if hasattr(tgt, "dtype") else val
+            if shd is not None:
+                arr = jax.device_put(arr, shd)
+            out.append(arr)
+        return jax.tree_util.tree_unflatten(treedef, out)

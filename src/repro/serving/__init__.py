@@ -1,0 +1,1 @@
+"""Serving tier: Moby edge-cloud engine + generic two-tier LM serving."""

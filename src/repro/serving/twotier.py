@@ -1,0 +1,95 @@
+"""Generic two-tier serving: Moby's anchor/transform pattern for any model
+pair (DESIGN.md §4 — the paper's technique as a first-class framework
+feature).
+
+The pattern, abstracted from Fig. 4:
+  * a CHEAP per-step path produces results every step (Moby: 2D->3D
+    transformation; LMs: a draft/pruned model step),
+  * an EXPENSIVE anchor path re-synchronizes state on scheduled steps
+    (Moby: cloud 3D detector; LMs: the full model),
+  * an error-triggered SCHEDULER (test steps every N_T, threshold Q_T)
+    decides when the next anchor happens — identical semantics to
+    core.scheduler but over an arbitrary error metric.
+
+For LMs the divergence metric is the cheap/full agreement rate on test
+steps (top-1 token match), and the anchor step re-syncs the cheap tier's
+state from the full tier (KV-cache handoff or plain re-prefill).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class TwoTierConfig:
+    n_t: int = 4            # test period (steps)
+    q_t: float = 0.7        # quality threshold triggering an anchor
+    max_cheap_run: int = 64  # hard cap between anchors
+
+
+@dataclasses.dataclass
+class StepTrace:
+    step: int
+    kind: str               # anchor | test | cheap
+    quality: Optional[float]
+    cost: float
+
+
+class TwoTierEngine:
+    """Drives (cheap_step, anchor_step, test_quality) callbacks.
+
+    cheap_step(state, x) -> (state, out, cost)
+    anchor_step(state, x) -> (state, out, cost)   # re-syncs state
+    test_quality(state, x, out) -> float in [0, 1]  # agreement vs anchor
+    """
+
+    def __init__(self, cfg: TwoTierConfig, cheap_step: Callable,
+                 anchor_step: Callable, test_quality: Callable):
+        self.cfg = cfg
+        self.cheap_step = cheap_step
+        self.anchor_step = anchor_step
+        self.test_quality = test_quality
+
+    def run(self, state: Any, xs: List[Any]) -> tuple:
+        traces: List[StepTrace] = []
+        outs = []
+        anchor_pending = True
+        since_test = 0
+        since_anchor = 0
+        for i, x in enumerate(xs):
+            if anchor_pending or since_anchor >= self.cfg.max_cheap_run:
+                state, out, cost = self.anchor_step(state, x)
+                traces.append(StepTrace(i, "anchor", None, cost))
+                anchor_pending = False
+                since_anchor = 0
+                since_test = 0
+            else:
+                state, out, cost = self.cheap_step(state, x)
+                since_anchor += 1
+                since_test += 1
+                if since_test >= self.cfg.n_t:
+                    q = self.test_quality(state, x, out)
+                    traces.append(StepTrace(i, "test", q, cost))
+                    since_test = 0
+                    if q < self.cfg.q_t:
+                        anchor_pending = True
+                else:
+                    traces.append(StepTrace(i, "cheap", None, cost))
+            outs.append(out)
+        return state, outs, traces
+
+
+def summarize(traces: List[StepTrace]) -> dict:
+    kinds = [t.kind for t in traces]
+    costs = [t.cost for t in traces]
+    return {
+        "steps": len(traces),
+        "anchors": kinds.count("anchor"),
+        "tests": kinds.count("test"),
+        "cheap": kinds.count("cheap"),
+        "total_cost": float(np.sum(costs)),
+        "mean_cost": float(np.mean(costs)),
+    }

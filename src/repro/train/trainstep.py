@@ -1,0 +1,64 @@
+"""The jit-compiled training step: loss + grads (+accumulation) + AdamW.
+
+Gradient accumulation runs as a ``lax.scan`` over microbatches inside one
+compiled step, so a single ``train_step`` always covers the full global
+batch regardless of the per-device activation budget.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.config import ArchConfig
+from repro.train import optimizer as opt
+
+
+def make_train_step(cfg: ArchConfig, ocfg: opt.AdamWConfig,
+                    grad_compressor=None):
+    """Returns train_step(params, opt_state, batch) -> (params, state, metrics).
+
+    grad_compressor: optional ``runtime.gradcomp`` hook applied to gradients
+    before the optimizer (top-k / int8 compression with error feedback).
+    """
+
+    def loss_and_grads(params, batch):
+        if cfg.grad_accum <= 1:
+            return jax.value_and_grad(
+                lambda p: lm.loss_fn(p, cfg, batch))(params)
+        g = cfg.grad_accum
+
+        def split(x):
+            b = x.shape[0]
+            return x.reshape((g, b // g) + x.shape[1:])
+
+        micro = {k: split(v) for k, v in batch.items()}
+        zero = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def acc_step(carry, mb):
+            loss_sum, gsum = carry
+            loss, grads = jax.value_and_grad(
+                lambda p: lm.loss_fn(p, cfg, mb))(params)
+            gsum = jax.tree_util.tree_map(
+                lambda a, b: a + b.astype(jnp.float32), gsum, grads)
+            return (loss_sum + loss, gsum), None
+
+        (loss_sum, gsum), _ = jax.lax.scan(acc_step, (jnp.float32(0), zero),
+                                           micro)
+        grads = jax.tree_util.tree_map(lambda x: x / g, gsum)
+        return loss_sum / g, grads
+
+    def train_step(params, opt_state, batch):
+        loss, grads = loss_and_grads(params, batch)
+        if grad_compressor is not None:
+            grads, opt_state = grad_compressor(grads, opt_state)
+        new_params, new_state, metrics = opt.update(ocfg, grads, opt_state,
+                                                    params)
+        metrics["loss"] = loss
+        return new_params, new_state, metrics
+
+    return train_step

@@ -1,0 +1,100 @@
+"""Per-architecture smoke tests: reduced configs, one forward/train/decode
+step on CPU, asserting shapes and finiteness (assignment requirement f)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import decode, lm
+from repro.models.params import init_params
+
+jax.config.update("jax_platform_name", "cpu")
+
+B, S = 2, 16
+
+
+def _batch(cfg, key):
+    kt, kl = jax.random.split(key)
+    batch = {
+        "tokens": jax.random.randint(kt, (B, S), 0, cfg.vocab),
+        "labels": jax.random.randint(kl, (B, S), 0, cfg.vocab),
+    }
+    if cfg.family in ("encdec", "audio"):
+        batch["enc_embeds"] = jax.random.normal(
+            key, (B, cfg.enc_seq, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+class TestArchSmoke:
+    def test_forward_shapes_finite(self, arch):
+        cfg = dataclasses.replace(configs.get_smoke(arch), dtype=jnp.float32)
+        params = init_params(lm.model_defs(cfg), jax.random.key(0))
+        batch = _batch(cfg, jax.random.key(1))
+        logits = lm.forward(params, cfg, tokens=batch["tokens"],
+                            enc_embeds=batch.get("enc_embeds"))
+        assert logits.shape == (B, S, cfg.vocab)
+        assert bool(jnp.isfinite(logits).all()), f"{arch}: non-finite logits"
+
+    def test_train_step_loss(self, arch):
+        cfg = dataclasses.replace(configs.get_smoke(arch), dtype=jnp.float32)
+        params = init_params(lm.model_defs(cfg), jax.random.key(0))
+        batch = _batch(cfg, jax.random.key(1))
+        loss, grads = jax.value_and_grad(
+            lambda p: lm.loss_fn(p, cfg, batch))(params)
+        assert bool(jnp.isfinite(loss)), f"{arch}: loss={loss}"
+        # A sane CE at init: close to log(vocab).
+        assert float(loss) < np.log(cfg.vocab) * 2 + 1
+        flat = jax.tree_util.tree_leaves(grads)
+        assert all(bool(jnp.isfinite(g).all()) for g in flat), \
+            f"{arch}: non-finite grads"
+        assert any(float(jnp.abs(g).max()) > 0 for g in flat), \
+            f"{arch}: all-zero grads"
+
+    def test_decode_step(self, arch):
+        cfg = dataclasses.replace(configs.get_smoke(arch), dtype=jnp.float32)
+        params = init_params(lm.model_defs(cfg), jax.random.key(0))
+        enc_out = None
+        state = decode.init_decode(cfg, B, max_len=32, enc_out=enc_out)
+        tokens = jnp.array([1, 2], jnp.int32)
+        logits, state = decode.decode_step(params, cfg, state, tokens)
+        assert logits.shape == (B, cfg.vocab)
+        assert bool(jnp.isfinite(logits).all()), f"{arch}: decode non-finite"
+        assert int(state.cache_pos[0]) == 1
+        # Second step advances.
+        logits2, state = decode.decode_step(params, cfg, state, tokens)
+        assert bool(jnp.isfinite(logits2).all())
+        assert int(state.cache_pos[0]) == 2
+
+    def test_full_config_matches_assignment(self, arch):
+        """The full configs must carry the exact assigned hyperparameters."""
+        cfg = configs.get(arch)
+        expect = {
+            "whisper_small": (12, 768, 12, 12, 3072, 51865),
+            "qwen2_vl_2b": (28, 1536, 12, 2, 8960, 151936),
+            "deepseek_v2_236b": (60, 5120, 128, 128, 12288, 102400),
+            "moonshot_v1_16b_a3b": (48, 2048, 16, 16, 11264, 163840),
+            "glm4_9b": (40, 4096, 32, 2, 13696, 151552),
+            "qwen2_5_3b": (36, 2048, 16, 2, 11008, 151936),
+            "minitron_4b": (32, 3072, 24, 8, 9216, 256000),
+            "granite_20b": (52, 6144, 48, 1, 24576, 49152),
+            "xlstm_350m": (24, 1024, 4, 4, 0, 50304),
+            "zamba2_1_2b": (38, 2048, 32, 32, 8192, 32000),
+        }[arch]
+        got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+               cfg.d_ff, cfg.vocab)
+        assert got == expect, (arch, got, expect)
+        if arch == "deepseek_v2_236b":
+            assert cfg.kv_lora == 512 and cfg.n_experts == 160 and cfg.top_k == 6
+            assert cfg.moe_d_ff == 1536
+        if arch == "moonshot_v1_16b_a3b":
+            assert cfg.n_experts == 64 and cfg.top_k == 6 and cfg.moe_d_ff == 1408
+        if arch == "zamba2_1_2b":
+            assert cfg.ssm_state == 64
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-v", "-x"])

@@ -1,0 +1,158 @@
+"""Tests for Hungarian/auction assignment and Kalman tracking."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import association, tracking
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def brute_force_max(benefit: np.ndarray) -> float:
+    n = benefit.shape[0]
+    best = -1e18
+    for perm in itertools.permutations(range(n)):
+        best = max(best, sum(benefit[i, perm[i]] for i in range(n)))
+    return best
+
+
+class TestHungarianOracle:
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(2, 5), st.integers(0, 10_000))
+    def test_matches_brute_force(self, n, seed):
+        rng = np.random.default_rng(seed)
+        cost = rng.uniform(0, 1, (n, n))
+        r2c = association.hungarian_numpy(cost)
+        got = cost[np.arange(n), r2c].sum()
+        best = -brute_force_max(-cost)
+        assert np.isclose(got, best, atol=1e-9)
+        assert len(set(r2c.tolist())) == n  # valid permutation
+
+    def test_rectangular(self):
+        cost = np.array([[1.0, 0.0, 5.0], [0.0, 2.0, 3.0]])
+        r2c = association.hungarian_numpy(cost)
+        assert cost[np.arange(2), r2c].sum() == 0.0
+
+
+class TestAuction:
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(2, 6), st.integers(0, 10_000))
+    def test_near_optimal(self, n, seed):
+        rng = np.random.default_rng(seed)
+        benefit = np.round(rng.uniform(0, 1, (n, n)), 3)
+        p2o = np.asarray(association.auction_assign(jnp.asarray(benefit)))
+        assert len(set(p2o.tolist())) == n
+        got = benefit[np.arange(n), p2o].sum()
+        best = brute_force_max(benefit)
+        assert got >= best - n * 1e-4 - 1e-9, (got, best)
+
+    def test_unique_optimum_exact(self):
+        benefit = np.array([[0.9, 0.1, 0.0],
+                            [0.2, 0.8, 0.1],
+                            [0.0, 0.3, 0.7]])
+        p2o = np.asarray(association.auction_assign(jnp.asarray(benefit)))
+        assert p2o.tolist() == [0, 1, 2]
+
+
+class TestAssociate:
+    def test_basic_matching(self):
+        tracks = jnp.array([[0, 0, 10, 10], [20, 20, 30, 30]], jnp.float32)
+        dets = jnp.array([[21, 19, 31, 29], [1, 1, 11, 11], [50, 50, 60, 60]],
+                         jnp.float32)
+        t2d, d2t, _ = association.associate(
+            tracks, jnp.ones(2, bool), dets, jnp.ones(3, bool))
+        assert np.asarray(t2d).tolist() == [1, 0]
+        assert np.asarray(d2t).tolist() == [1, 0, -1]
+
+    def test_rejects_low_iou(self):
+        tracks = jnp.array([[0, 0, 10, 10]], jnp.float32)
+        dets = jnp.array([[9, 9, 19, 19]], jnp.float32)  # IoU ~ 0.005
+        t2d, d2t, _ = association.associate(
+            tracks, jnp.ones(1, bool), dets, jnp.ones(1, bool), iou_thresh=0.3)
+        assert np.asarray(t2d).tolist() == [-1]
+        assert np.asarray(d2t).tolist() == [-1]
+
+    def test_invalid_masked_out(self):
+        tracks = jnp.array([[0, 0, 10, 10], [0, 0, 10, 10]], jnp.float32)
+        dets = jnp.array([[0, 0, 10, 10]], jnp.float32)
+        t2d, d2t, _ = association.associate(
+            tracks, jnp.array([False, True]), dets, jnp.ones(1, bool))
+        assert np.asarray(t2d).tolist() == [-1, 0]
+
+
+class TestKalmanTracking:
+    def test_predict_constant_velocity(self):
+        state = tracking.init_tracks(4)
+        # Manually place one active track with velocity.
+        x = state.x.at[0].set(jnp.array([10, 10, 100, 1, 2, 1, 0], jnp.float32))
+        state = state._replace(x=x, active=state.active.at[0].set(True))
+        state, boxes = tracking.predict(state)
+        assert np.isclose(float(state.x[0, 0]), 12.0)
+        assert np.isclose(float(state.x[0, 1]), 11.0)
+
+    def test_track_lifecycle(self):
+        """Spawn from detections, update on matches, die after max_age."""
+        state = tracking.init_tracks(4)
+        det = jnp.array([[0, 0, 10, 10]], jnp.float32)
+        d2t = jnp.array([-1], jnp.int32)
+        state, d2t = tracking.spawn(state, det, jnp.ones(1, bool), d2t)
+        assert bool(state.active[0])
+        assert int(d2t[0]) == 0
+        assert int(state.next_id) == 1
+        # Miss for max_age+1 frames -> dies.
+        params = tracking.TrackerParams(max_age=2)
+        for _ in range(3):
+            state, _ = tracking.predict(state)
+            state = tracking.update(state, jnp.array([-1], jnp.int32)[:1].repeat(4),
+                                    det, params)
+        assert not bool(state.active[0])
+
+    def test_update_converges_to_measurement(self):
+        state = tracking.init_tracks(1)
+        det0 = jnp.array([[0, 0, 10, 10]], jnp.float32)
+        state, _ = tracking.spawn(state, det0, jnp.ones(1, bool),
+                                  jnp.array([-1], jnp.int32))
+        # Feed a displaced measurement repeatedly.
+        det = jnp.array([[10, 0, 20, 10]], jnp.float32)
+        for _ in range(12):
+            state, _ = tracking.predict(state)
+            state = tracking.update(state, jnp.array([0], jnp.int32), det)
+        assert abs(float(state.x[0, 0]) - 15.0) < 1.0  # center u -> 15
+
+    def test_spawn_multiple_into_free_slots(self):
+        state = tracking.init_tracks(4)
+        dets = jnp.array([[0, 0, 10, 10], [20, 20, 30, 30], [40, 40, 50, 50]],
+                         jnp.float32)
+        d2t = jnp.array([-1, -1, -1], jnp.int32)
+        state, d2t = tracking.spawn(state, dets, jnp.ones(3, bool), d2t)
+        assert int(jnp.sum(state.active)) == 3
+        assert sorted(np.asarray(d2t).tolist()) == [0, 1, 2]
+        assert int(state.next_id) == 3
+
+    def test_spawn_respects_capacity(self):
+        state = tracking.init_tracks(2)
+        dets = jnp.array([[0, 0, 10, 10], [20, 20, 30, 30], [40, 40, 50, 50]],
+                         jnp.float32)
+        d2t = jnp.array([-1, -1, -1], jnp.int32)
+        state, d2t = tracking.spawn(state, dets, jnp.ones(3, bool), d2t)
+        assert int(jnp.sum(state.active)) == 2
+        assert np.sum(np.asarray(d2t) >= 0) == 2
+
+    def test_set_box3d_roundtrip(self):
+        state = tracking.init_tracks(3)
+        dets = jnp.array([[0, 0, 10, 10], [20, 20, 30, 30]], jnp.float32)
+        d2t = jnp.array([-1, -1], jnp.int32)
+        state, d2t = tracking.spawn(state, dets, jnp.ones(2, bool), d2t)
+        boxes3d = jnp.arange(14, dtype=jnp.float32).reshape(2, 7)
+        state = tracking.set_box3d(state, d2t, boxes3d, jnp.ones(2, bool))
+        t0 = int(d2t[0])
+        assert bool(state.has_box3d[t0])
+        assert np.allclose(np.asarray(state.box3d[t0]), np.arange(7))
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-v"])

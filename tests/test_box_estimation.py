@@ -1,0 +1,134 @@
+"""Tests for 3D box estimation (Eqs. 1-2, Fig. 9-10)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import box_estimation, boxes as box_ops, ransac
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _gt_cluster(rng, box, n=200):
+    """Sample points on the two faces of ``box`` visible from the origin."""
+    x, y, z, l, w, h, th = [float(v) for v in box]
+    c, s = np.cos(th), np.sin(th)
+    rot = np.array([[c, -s, 0], [s, c, 0], [0, 0, 1]])
+    ctr = np.array([x, y, z])
+    pts = []
+    for axis, sign, half in [(0, 1, l / 2), (0, -1, l / 2),
+                             (1, 1, w / 2), (1, -1, w / 2)]:
+        nl = np.zeros(3)
+        nl[axis] = sign
+        normal = rot @ nl
+        fc = ctr + rot @ (nl * np.array([l / 2, w / 2, h / 2]))
+        if np.dot(normal, fc) >= 0:
+            continue
+        local = np.zeros((n // 2, 3))
+        local[:, axis] = sign * half
+        other = 1 - axis
+        oh = w / 2 if axis == 0 else l / 2
+        local[:, other] = rng.uniform(-oh, oh, n // 2)
+        local[:, 2] = rng.uniform(-h / 2, h / 2, n // 2)
+        pts.append((rot @ local.T).T + ctr)
+    return np.concatenate(pts).astype(np.float32)
+
+
+def _estimate(rng, gt_box, prev_box=None, n=200, key=0):
+    pts = _gt_cluster(rng, gt_box, n)
+    buf = np.zeros((max(len(pts), 256), 3), np.float32)
+    buf[:len(pts)] = pts
+    valid = np.zeros(len(buf), bool)
+    valid[:len(pts)] = True
+    pts_j = jnp.asarray(buf)
+    valid_j = jnp.asarray(valid)
+    fit = ransac.ransac_plane(jax.random.key(key), pts_j, valid_j,
+                              ransac.RansacParams(num_iters=60))
+    associated = prev_box is not None
+    prev = jnp.asarray(prev_box if associated else np.zeros(7), jnp.float32)
+    inp = box_estimation.EstimateInputs(
+        points=pts_j, inlier_mask=fit.inliers, cluster_mask=valid_j,
+        normal=fit.normal, plane_ok=fit.ok,
+        associated=jnp.bool_(associated), prev_box=prev,
+        avg_size=jnp.asarray([4.0, 1.7, 1.6], jnp.float32))
+    box, ok = box_estimation.estimate_box(inp)
+    return np.asarray(box), bool(ok), fit
+
+
+class TestHeadingFromNormal:
+    def test_frontal_same_direction(self):
+        h, frontal = box_estimation.heading_from_normal(
+            jnp.array([1.0, 0.05, 0.0]), jnp.array([1.0, 0.0]))
+        assert bool(frontal)
+        assert float(h[0]) > 0.99
+
+    def test_frontal_opposite(self):
+        h, frontal = box_estimation.heading_from_normal(
+            jnp.array([-1.0, 0.05, 0.0]), jnp.array([1.0, 0.0]))
+        assert bool(frontal)
+        assert float(h[0]) > 0.99  # flipped to match previous heading
+
+    def test_side_surface(self):
+        h, frontal = box_estimation.heading_from_normal(
+            jnp.array([0.0, 1.0, 0.0]), jnp.array([1.0, 0.0]))
+        assert not bool(frontal)
+        assert float(h[0]) > 0.99  # rotated toward previous heading
+
+
+class TestEstimateAssociated:
+    @settings(max_examples=15, deadline=None)
+    @given(st.floats(8, 40), st.floats(-10, 10), st.floats(-np.pi, np.pi),
+           st.integers(0, 1000))
+    def test_recovers_gt_box(self, x, y, th, seed):
+        rng = np.random.default_rng(seed)
+        gt = np.array([x, y, 0.0, 4.2, 1.8, 1.5, th], np.float32)
+        # Previous box: same object, slightly earlier (heading close).
+        prev = gt.copy()
+        prev[0] -= 0.5 * np.cos(th)
+        prev[1] -= 0.5 * np.sin(th)
+        box, ok, _ = _estimate(rng, gt, prev_box=prev, key=seed)
+        assert ok
+        iou = float(box_ops.iou_3d(jnp.asarray(box), jnp.asarray(gt)))
+        assert iou > 0.4, (iou, box, gt)
+
+    def test_center_displacement_outward(self):
+        """Center must land on the far side of the visible surface."""
+        rng = np.random.default_rng(0)
+        gt = np.array([15.0, 0.0, 0.0, 4.0, 1.8, 1.5, 0.0], np.float32)
+        box, ok, fit = _estimate(rng, gt, prev_box=gt)
+        assert ok
+        # Estimated center must be at x ~ 15 (not 13 = surface pulled toward
+        # the sensor).
+        assert abs(box[0] - 15.0) < 0.8, box
+
+
+class TestEstimateNewObject:
+    def test_two_hypothesis_disambiguation(self):
+        rng = np.random.default_rng(1)
+        gt = np.array([12.0, 2.0, 0.0, 4.0, 1.7, 1.6, 0.0], np.float32)
+        box, ok, _ = _estimate(rng, gt, prev_box=None)
+        assert ok
+        iou = float(box_ops.iou_3d(jnp.asarray(box), jnp.asarray(gt)))
+        assert iou > 0.3, (iou, box)
+
+    def test_uses_average_size(self):
+        rng = np.random.default_rng(2)
+        gt = np.array([12.0, 2.0, 0.0, 4.0, 1.7, 1.6, 0.0], np.float32)
+        box, ok, _ = _estimate(rng, gt, prev_box=None)
+        assert np.allclose(box[3:6], [4.0, 1.7, 1.6], atol=1e-5)
+
+    def test_empty_cluster_not_ok(self):
+        pts = jnp.zeros((64, 3), jnp.float32)
+        valid = jnp.zeros((64,), bool)
+        inp = box_estimation.EstimateInputs(
+            points=pts, inlier_mask=valid, cluster_mask=valid,
+            normal=jnp.array([1.0, 0, 0]), plane_ok=jnp.bool_(False),
+            associated=jnp.bool_(False), prev_box=jnp.zeros(7),
+            avg_size=jnp.asarray([4.0, 1.7, 1.6]))
+        _, have_pts = box_estimation.estimate_box(inp)
+        assert not bool(have_pts)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-v"])

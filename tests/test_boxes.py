@@ -1,0 +1,137 @@
+"""Geometry unit + property tests for repro.core.boxes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import boxes as box_ops
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _box(x=0, y=0, z=0, l=4, w=2, h=1.5, th=0.0):
+    return jnp.array([x, y, z, l, w, h, th], jnp.float32)
+
+
+class TestCorners:
+    def test_axis_aligned_corners(self):
+        c = box_ops.corners_bev(_box(l=4, w=2))
+        expect = {(2, 1), (-2, 1), (-2, -1), (2, -1)}
+        got = {tuple(np.round(np.asarray(p), 5)) for p in c}
+        assert got == expect
+
+    def test_rotation_90(self):
+        c = box_ops.corners_bev(_box(l=4, w=2, th=np.pi / 2))
+        got = {tuple(np.round(np.asarray(p), 4)) for p in c}
+        assert got == {(-1, 2), (-1, -2), (1, 2), (1, -2)}
+
+    def test_corners3d_z(self):
+        c3 = box_ops.corners_3d(_box(z=1.0, h=2.0))
+        assert np.allclose(np.asarray(c3[:4, 2]), 0.0, atol=1e-5)
+        assert np.allclose(np.asarray(c3[4:, 2]), 2.0, atol=1e-5)
+
+
+class TestIoU:
+    def test_identical(self):
+        b = _box()
+        assert np.isclose(float(box_ops.iou_3d(b, b)), 1.0, atol=1e-4)
+
+    def test_disjoint(self):
+        assert float(box_ops.iou_3d(_box(), _box(x=100.0))) == 0.0
+
+    def test_half_overlap_axis_aligned(self):
+        # Two 4x2 boxes offset by 2 along x: intersection 2x2=4, union 12.
+        got = float(box_ops.iou_bev(_box(), _box(x=2.0)))
+        assert np.isclose(got, 4.0 / 12.0, atol=1e-4)
+
+    def test_z_offset_only(self):
+        # Same BEV, half z overlap: inter = 8*0.75, union = 2*12-6.
+        got = float(box_ops.iou_3d(_box(h=1.5), _box(h=1.5, z=0.75)))
+        assert np.isclose(got, (8 * 0.75) / (2 * 12 - 6), atol=1e-4)
+
+    def test_rotated_45_contained(self):
+        # Small rotated box inside a big one: IoU = small/big areas.
+        big = _box(l=10, w=10)
+        small = _box(l=2, w=2, th=np.pi / 4)
+        got = float(box_ops.iou_bev(big, small))
+        assert np.isclose(got, 4.0 / 100.0, atol=1e-4)
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.floats(-3, 3), st.floats(-3, 3), st.floats(-np.pi, np.pi),
+           st.floats(1, 5), st.floats(1, 5))
+    def test_bounds_and_symmetry(self, dx, dy, th, l, w):
+        a = _box(l=4, w=2)
+        b = _box(x=dx, y=dy, l=l, w=w, th=th)
+        i1 = float(box_ops.iou_3d(a, b))
+        i2 = float(box_ops.iou_3d(b, a))
+        assert 0.0 <= i1 <= 1.0 + 1e-5
+        assert np.isclose(i1, i2, atol=1e-4)
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.floats(-np.pi, np.pi))
+    def test_rotation_invariance(self, th):
+        # IoU of a box with itself rotated by theta about its own center is
+        # invariant when both are rotated by the same global angle.
+        a = _box(th=0.3)
+        b = _box(th=0.3 + 0.4)
+        a2 = _box(th=0.3 + th)
+        b2 = _box(th=0.3 + 0.4 + th)
+        assert np.isclose(float(box_ops.iou_bev(a, b)),
+                          float(box_ops.iou_bev(a2, b2)), atol=1e-3)
+
+    def test_monte_carlo_area(self):
+        # Property: rotated intersection area matches Monte-Carlo estimate.
+        rng = np.random.default_rng(0)
+        a = _box(l=4, w=2, th=0.5)
+        b = _box(x=1.0, y=0.5, l=3, w=2.5, th=-0.7)
+        pts = rng.uniform(-4, 4, (200_000, 2)).astype(np.float32)
+        in_a = np.asarray(box_ops.points_in_box_bev(jnp.asarray(pts), a))
+        in_b = np.asarray(box_ops.points_in_box_bev(jnp.asarray(pts), b))
+        mc = np.mean(in_a & in_b) * 64.0
+        exact = float(box_ops.rect_intersection_area(
+            box_ops.corners_bev(a), box_ops.corners_bev(b)))
+        assert np.isclose(mc, exact, rtol=0.05, atol=0.05)
+
+
+class TestPointsInBox:
+    def test_inside_outside(self):
+        b = _box(l=4, w=2, h=2, th=np.pi / 2)
+        pts = jnp.array([[0, 0, 0], [0, 1.9, 0], [1.9, 0, 0], [0, 0, 1.5]],
+                        jnp.float32)
+        m = np.asarray(box_ops.points_in_box_3d(pts, b))
+        # After 90deg rotation the box extends 2 in y, 1 in x.
+        assert m.tolist() == [True, True, False, False]
+
+
+class TestProjection2D:
+    def test_box_project_center(self):
+        """A box straight ahead must project around the principal point and
+        grow when nearer (KITTI-like Tr/P from the scene simulator)."""
+        from repro.data import scenes
+        tr, p = scenes.make_calibration(scenes.SceneConfig())
+        tr, p = jnp.asarray(tr), jnp.asarray(p)
+        near = box_ops.project_box3d_to_2d(
+            jnp.array([10.0, 0, 0, 4, 2, 1.5, 0.0]), tr, p)
+        far = box_ops.project_box3d_to_2d(
+            jnp.array([40.0, 0, 0, 4, 2, 1.5, 0.0]), tr, p)
+        near, far = np.asarray(near), np.asarray(far)
+        assert near[0] < near[2] and near[1] < near[3]
+        # Nearer box is bigger on screen and both straddle the image center.
+        assert (near[2] - near[0]) > (far[2] - far[0])
+        cx = scenes.SceneConfig().img_w / 2
+        assert near[0] < cx < near[2]
+        assert far[0] < cx < far[2]
+
+
+class TestAabbIoU2d:
+    def test_simple(self):
+        a = jnp.array([[0, 0, 2, 2]], jnp.float32)
+        b = jnp.array([[1, 1, 3, 3], [10, 10, 11, 11]], jnp.float32)
+        m = np.asarray(box_ops.aabb_iou_2d(a, b))
+        assert np.isclose(m[0, 0], 1.0 / 7.0, atol=1e-5)
+        assert m[0, 1] == 0.0
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-v"])

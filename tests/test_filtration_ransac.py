@@ -1,0 +1,151 @@
+"""Tests for Algorithm 1 (point filtration) and RANSAC plane fitting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import filtration, ransac
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _cluster_with_background(rng, n_obj=60, n_bg=20, obj_center=(10.0, 2.0, 0.0),
+                             bg_extra=12.0):
+    """Object points near obj_center, background points ~bg_extra m behind."""
+    c = np.array(obj_center)
+    obj = c + rng.normal(0, 0.8, (n_obj, 3))
+    ray = c / np.linalg.norm(c)
+    bg = c + ray * bg_extra + rng.normal(0, 1.0, (n_bg, 3))
+    pts = np.concatenate([obj, bg]).astype(np.float32)
+    valid = np.ones(len(pts), bool)
+    is_obj = np.arange(len(pts)) < n_obj
+    return jnp.asarray(pts), jnp.asarray(valid), is_obj
+
+
+class TestFiltration:
+    def test_keeps_subset_of_valid(self):
+        rng = np.random.default_rng(0)
+        pts, valid, _ = _cluster_with_background(rng)
+        keep = filtration.filter_cluster(pts, valid)
+        assert np.all(~np.asarray(keep) | np.asarray(valid))
+
+    def test_removes_tainted_background(self):
+        """The paper reports 98% of tainted points removed; assert >=90%."""
+        rng = np.random.default_rng(1)
+        removed_frac = []
+        kept_frac = []
+        for i in range(10):
+            pts, valid, is_obj = _cluster_with_background(
+                rng, obj_center=(rng.uniform(6, 40), rng.uniform(-8, 8), 0.0))
+            keep = np.asarray(filtration.filter_cluster(pts, valid))
+            bg = ~is_obj
+            removed_frac.append(1.0 - keep[bg].mean())
+            kept_frac.append(keep[is_obj].mean())
+        assert np.mean(removed_frac) >= 0.9, np.mean(removed_frac)
+        assert np.mean(kept_frac) >= 0.9, np.mean(kept_frac)
+
+    def test_empty_cluster(self):
+        pts = jnp.zeros((16, 3), jnp.float32)
+        valid = jnp.zeros((16,), bool)
+        keep = filtration.filter_cluster(pts, valid)
+        assert not np.any(np.asarray(keep))
+
+    def test_small_cluster_iterates(self):
+        """Critical point stepping: a lone near point must not suppress the
+        true cluster further out (vehicles close together case)."""
+        rng = np.random.default_rng(2)
+        # 3 stray points at 5 m, a real cluster (40 pts) at 19 m: with
+        # F_T=4.5 the stray ball catches < M_T=24 points, so the critical
+        # point must step outward (S_T=12) and find the real cluster.
+        stray = np.array([5.0, 0, 0]) + rng.normal(0, 0.2, (3, 3))
+        real = np.array([19.0, 0, 0]) + rng.normal(0, 0.9, (40, 3))
+        pts = jnp.asarray(np.concatenate([stray, real]).astype(np.float32))
+        valid = jnp.ones((43,), bool)
+        keep = np.asarray(filtration.filter_cluster(pts, valid))
+        assert keep[3:].sum() >= 30  # real cluster kept
+
+    def test_vmapped_matches_single(self):
+        rng = np.random.default_rng(3)
+        p1, v1, _ = _cluster_with_background(rng)
+        p2, v2, _ = _cluster_with_background(rng, obj_center=(20.0, -3.0, 0.0))
+        batch_p = jnp.stack([p1, p2])
+        batch_v = jnp.stack([v1, v2])
+        kb = np.asarray(filtration.filter_clusters(batch_p, batch_v))
+        k1 = np.asarray(filtration.filter_cluster(p1, v1))
+        k2 = np.asarray(filtration.filter_cluster(p2, v2))
+        assert np.array_equal(kb[0], k1)
+        assert np.array_equal(kb[1], k2)
+
+
+class TestRansac:
+    def _plane_cluster(self, rng, normal, d, n=120, noise=0.0):
+        normal = np.asarray(normal, np.float64)
+        normal = normal / np.linalg.norm(normal)
+        # Basis of the plane.
+        a = np.array([1.0, 0, 0]) if abs(normal[0]) < 0.9 else np.array([0, 1.0, 0])
+        b1 = np.cross(normal, a)
+        b1 /= np.linalg.norm(b1)
+        b2 = np.cross(normal, b1)
+        uv = rng.uniform(-2, 2, (n, 2))
+        pts = -d * normal + uv[:, :1] * b1 + uv[:, 1:] * b2
+        pts = pts + rng.normal(0, noise, pts.shape)
+        return jnp.asarray(pts.astype(np.float32))
+
+    def test_exact_recovery_noiseless(self):
+        rng = np.random.default_rng(0)
+        normal = np.array([0.8, 0.6, 0.0])
+        pts = self._plane_cluster(rng, normal, d=-8.0)
+        valid = jnp.ones((pts.shape[0],), bool)
+        fit = ransac.ransac_plane(jax.random.key(0), pts, valid)
+        n_hat = np.asarray(fit.normal)
+        cosang = abs(np.dot(n_hat, normal / np.linalg.norm(normal)))
+        assert bool(fit.ok)
+        assert cosang > 0.999, (n_hat, cosang)
+        assert int(fit.num_inliers) >= 118
+
+    def test_outlier_robustness(self):
+        rng = np.random.default_rng(1)
+        plane_pts = np.asarray(self._plane_cluster(rng, [1.0, 0.2, 0], -10.0, n=90))
+        outliers = rng.uniform(-5, 5, (30, 3)).astype(np.float32) + [10, 0, 0]
+        pts = jnp.asarray(np.concatenate([plane_pts, outliers]))
+        valid = jnp.ones((120,), bool)
+        fit = ransac.ransac_plane(jax.random.key(1), pts, valid,
+                                  ransac.RansacParams(num_iters=60))
+        inl = np.asarray(fit.inliers)
+        assert inl[:90].mean() > 0.9
+        assert inl[90:].mean() < 0.3
+
+    def test_rejects_horizontal_plane(self):
+        """Top-surface suppression (paper fn. 2): a horizontal plane must not
+        win even if it has many points."""
+        rng = np.random.default_rng(2)
+        top = self._plane_cluster(rng, [0, 0, 1.0], -1.0, n=100)
+        side = self._plane_cluster(rng, [1.0, 0, 0], -9.0, n=60)
+        pts = jnp.concatenate([top, side])
+        valid = jnp.ones((160,), bool)
+        fit = ransac.ransac_plane(jax.random.key(2), pts, valid,
+                                  ransac.RansacParams(num_iters=80))
+        assert abs(float(fit.normal[2])) <= 0.7
+
+    def test_degenerate_cluster(self):
+        pts = jnp.zeros((8, 3), jnp.float32)
+        valid = jnp.zeros((8,), bool)
+        fit = ransac.ransac_plane(jax.random.key(0), pts, valid)
+        assert not bool(fit.ok)
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.floats(-0.5, 0.5), st.floats(0.2, 1.0))
+    def test_property_recovery(self, ny, nx):
+        rng = np.random.default_rng(int(abs(ny * 1000) + nx * 100))
+        normal = np.array([nx, ny, 0.05])
+        pts = self._plane_cluster(rng, normal, d=-9.0, noise=0.01)
+        valid = jnp.ones((pts.shape[0],), bool)
+        fit = ransac.ransac_plane(jax.random.key(3), pts, valid)
+        n_hat = np.asarray(fit.normal)
+        cosang = abs(np.dot(n_hat, normal / np.linalg.norm(normal)))
+        assert cosang > 0.98
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-v"])

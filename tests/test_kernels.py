@@ -1,0 +1,157 @@
+"""Pallas kernel sweeps: every kernel vs its ref.py oracle (interpret mode),
+across shapes and dtypes (assignment requirement c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention import ops as dec_ops
+from repro.kernels.decode_attention import ref as dec_ref
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.flash_attention import ref as fa_ref
+from repro.kernels.iou2d import ops as iou_ops
+from repro.kernels.iou2d import ref as iou_ref
+from repro.kernels.pillar_scatter import ops as ps_ops
+from repro.kernels.pillar_scatter import ref as ps_ref
+from repro.kernels.point_proj import ops as pp_ops
+from repro.kernels.point_proj import ref as pp_ref
+from repro.kernels.ransac_score import ops as rs_ops
+from repro.kernels.ransac_score import ref as rs_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestRansacScore:
+    @pytest.mark.parametrize("o,p,k", [(1, 64, 30), (4, 256, 30), (8, 100, 60),
+                                       (2, 256, 128)])
+    def test_matches_ref(self, o, p, k):
+        rng = np.random.default_rng(o * 100 + p + k)
+        pts = jnp.asarray(rng.normal(0, 5, (o, p, 3)).astype(np.float32))
+        valid = jnp.asarray(rng.uniform(size=(o, p)) < 0.8)
+        nrm = rng.normal(size=(o, k, 3))
+        nrm /= np.linalg.norm(nrm, axis=-1, keepdims=True)
+        nrm = jnp.asarray(nrm.astype(np.float32))
+        off = jnp.asarray(rng.normal(0, 3, (o, k)).astype(np.float32))
+        got = rs_ops.ransac_score(pts, valid, nrm, off, 0.5)
+        want = rs_ref.ransac_score_ref(pts, valid, nrm, off, 0.5)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+class TestIou2d:
+    @pytest.mark.parametrize("n,m", [(1, 1), (7, 13), (128, 128), (130, 250)])
+    def test_matches_ref(self, n, m):
+        rng = np.random.default_rng(n * 97 + m)
+        def boxes(cnt):
+            xy = rng.uniform(0, 100, (cnt, 2))
+            wh = rng.uniform(1, 30, (cnt, 2))
+            return jnp.asarray(np.concatenate([xy, xy + wh], 1)
+                               .astype(np.float32))
+        a, b = boxes(n), boxes(m)
+        got = iou_ops.iou2d(a, b)
+        want = iou_ref.iou2d_ref(a, b)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-6)
+
+
+class TestPointProj:
+    @pytest.mark.parametrize("n", [64, 512, 1000, 4096])
+    def test_matches_ref(self, n):
+        rng = np.random.default_rng(n)
+        from repro.data import scenes
+        tr, p = scenes.make_calibration(scenes.SceneConfig())
+        pts = jnp.asarray(rng.normal(0, 20, (n, 3)).astype(np.float32))
+        h, w = 128, 416
+        uv_g, d_g, vis_g, flat_g = pp_ops.point_proj(
+            pts, jnp.asarray(tr), jnp.asarray(p), h, w)
+        uv_r, d_r, vis_r, flat_r = pp_ref.point_proj_ref(
+            pts, jnp.asarray(tr), jnp.asarray(p), h, w)
+        np.testing.assert_allclose(np.asarray(uv_g), np.asarray(uv_r),
+                                   rtol=1e-4, atol=1e-3)
+        np.testing.assert_allclose(np.asarray(d_g), np.asarray(d_r),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(vis_g), np.asarray(vis_r))
+        # flat indices must agree wherever visible.
+        vis = np.asarray(vis_r)
+        np.testing.assert_array_equal(np.asarray(flat_g)[vis],
+                                      np.asarray(flat_r)[vis])
+
+    def test_label_lookup_consistency(self):
+        """Kernel path must reproduce core.projection's labeling."""
+        from repro.core import projection
+        from repro.data import scenes
+        cfg = scenes.SceneConfig(max_obj=8, n_points=2048, seed=3)
+        stream = scenes.SceneStream(cfg, seed=5)
+        frame = next(stream.frames(1))
+        calib = projection.Calibration(tr=jnp.asarray(stream.tr),
+                                       p=jnp.asarray(stream.p),
+                                       height=cfg.img_h, width=cfg.img_w)
+        pts = jnp.asarray(frame.points)
+        uv, _, vis = projection.project_points(pts, calib)
+        want = projection.label_points(uv, vis, jnp.asarray(frame.label_img))
+        _, _, vis2, flat = pp_ops.point_proj(pts, calib.tr, calib.p,
+                                             cfg.img_h, cfg.img_w)
+        got = pp_ops.label_points(flat, vis2, jnp.asarray(frame.label_img))
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+class TestPillarScatter:
+    @pytest.mark.parametrize("n,c,g", [(256, 8, 512), (1000, 64, 1024),
+                                       (4096, 32, 2048)])
+    def test_matches_ref(self, n, c, g):
+        rng = np.random.default_rng(n + c + g)
+        feats = jnp.asarray(rng.normal(size=(n, c)).astype(np.float32))
+        idx = jnp.asarray(rng.integers(0, g, n).astype(np.int32))
+        valid = jnp.asarray(rng.uniform(size=n) < 0.9)
+        got = ps_ops.pillar_scatter(feats, idx, valid, g)
+        want = ps_ref.pillar_scatter_ref(feats, idx, valid, g)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6, atol=1e-6)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("b,h,kv,sq,sk,hd", [
+        (1, 4, 4, 256, 256, 64),
+        (2, 8, 2, 512, 512, 128),   # GQA
+        (1, 4, 1, 300, 300, 64),    # MQA + ragged (padding path)
+        (2, 2, 2, 128, 640, 64),    # cross-ish kv longer
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_matches_ref(self, b, h, kv, sq, sk, hd, dtype, causal):
+        if causal and sq != sk:
+            pytest.skip("causal requires sq == sk in this contract")
+        rng = np.random.default_rng(b * 1000 + sq + sk + hd)
+        q = jnp.asarray(rng.normal(size=(b, h, sq, hd)), dtype)
+        k = jnp.asarray(rng.normal(size=(b, kv, sk, hd)), dtype)
+        v = jnp.asarray(rng.normal(size=(b, kv, sk, hd)), dtype)
+        got = fa_ops.flash_attention(q, k, v, causal=causal)
+        want = fa_ref.flash_attention_ref(q, k, v, causal=causal)
+        tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=tol, atol=tol)
+
+
+class TestDecodeAttention:
+    @pytest.mark.parametrize("b,h,kv,s,hd", [
+        (2, 4, 4, 512, 64),
+        (4, 8, 2, 1024, 128),
+        (1, 8, 1, 700, 64),
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, b, h, kv, s, hd, dtype):
+        rng = np.random.default_rng(b + s + hd)
+        q = jnp.asarray(rng.normal(size=(b, h, hd)), dtype)
+        ck = jnp.asarray(rng.normal(size=(b, kv, s, hd)), dtype)
+        cv = jnp.asarray(rng.normal(size=(b, kv, s, hd)), dtype)
+        pos = jnp.asarray(rng.integers(1, s, b).astype(np.int32))
+        got = dec_ops.decode_attention(q, ck, cv, pos)
+        want = dec_ref.decode_attention_ref(q, ck, cv, pos)
+        tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=tol, atol=tol)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-v", "-x"])

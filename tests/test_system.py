@@ -1,0 +1,59 @@
+"""End-to-end behaviour tests for the full Moby system (engine level)."""
+import numpy as np
+import pytest
+
+from repro.data import scenes
+from repro.serving import engine as engine_lib
+
+
+def _engine(mode, detector="pointpillar", **kw):
+    cfg = scenes.SceneConfig(max_obj=10, n_points=6144, mean_objects=5,
+                             density_scale=15000.0, seed=5)
+    return engine_lib.MobyEngine(cfg, detector, trace="belgium2", mode=mode,
+                                 seed=5, **kw)
+
+
+class TestEndToEnd:
+    def test_moby_beats_baselines_on_latency(self):
+        """The paper's headline: Moby cuts end-to-end latency by 56-92%."""
+        frames = 24
+        moby = _engine("moby").run(frames)
+        eo = _engine("edge_only").run(frames)
+        co = _engine("cloud_only").run(frames)
+        best = min(eo.mean_latency, co.mean_latency)
+        reduction = 1 - moby.mean_latency / best
+        assert reduction >= 0.4, (moby.mean_latency, best)
+
+    def test_moby_accuracy_close_to_detector(self):
+        """Modest accuracy loss (paper: <= 0.056 F1; allow 0.12 on the
+        synthetic benchmark)."""
+        frames = 24
+        moby = _engine("moby").run(frames)
+        eo = _engine("edge_only").run(frames)
+        assert eo.mean_f1 - moby.mean_f1 <= 0.12, (moby.mean_f1, eo.mean_f1)
+        assert moby.mean_f1 > 0.6
+
+    def test_scheduler_triggers_anchors_on_drift(self):
+        frames = 30
+        res = _engine("moby").run(frames)
+        kinds = [r.kind for r in res.records]
+        assert kinds[0] == "anchor"
+        assert kinds.count("anchor") >= 2  # re-anchoring happened
+        assert kinds.count("test") >= 2    # test frames offloaded
+
+    def test_onboard_latency_matches_10fps(self):
+        """Paper: Moby reaches ~10 FPS on-board (transform frames)."""
+        res = _engine("moby").run(24)
+        onboard = [r.onboard_s for r in res.records if r.kind != "anchor"]
+        assert np.mean(onboard) < 0.1, np.mean(onboard)
+
+    def test_ablation_ordering(self):
+        """Table 4: adding FOS then TBA should not hurt accuracy."""
+        frames = 24
+        trs = _engine("moby", use_fos=False, use_tba=False).run(frames)
+        full = _engine("moby", use_fos=True, use_tba=True).run(frames)
+        assert full.mean_f1 >= trs.mean_f1 - 0.05
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-v"])

@@ -1,0 +1,192 @@
+"""End-to-end tests: scene simulator -> Moby pipeline -> accuracy vs GT."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import metrics, projection, scheduler, transform
+from repro.data import scenes
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _make_calib(cfg, tr, p):
+    return projection.Calibration(tr=jnp.asarray(tr), p=jnp.asarray(p),
+                                  height=cfg.img_h, width=cfg.img_w)
+
+
+@pytest.fixture(scope="module")
+def scene_cfg():
+    return scenes.SceneConfig(max_obj=12, n_points=8192, mean_objects=5,
+                              density_scale=15000.0, seed=7)
+
+
+class TestSceneSimulator:
+    def test_frame_shapes(self, scene_cfg):
+        stream = scenes.SceneStream(scene_cfg, seed=1)
+        frame = next(stream.frames(1))
+        assert frame.points.shape == (scene_cfg.n_points, 3)
+        assert frame.label_img.shape == (scene_cfg.img_h, scene_cfg.img_w)
+        assert frame.gt_boxes.shape == (scene_cfg.max_obj, 7)
+        assert np.isfinite(frame.points).all()
+
+    def test_masks_cover_objects(self, scene_cfg):
+        """Projected object points should mostly land inside their own mask."""
+        stream = scenes.SceneStream(scene_cfg, seed=2)
+        frame = next(stream.frames(1))
+        calib = _make_calib(scene_cfg, stream.tr, stream.p)
+        uv, _, vis = projection.project_points(jnp.asarray(frame.points), calib)
+        labels = np.asarray(projection.label_points(
+            uv, vis, jnp.asarray(frame.label_img)))
+        vis = np.asarray(vis)
+        hit = 0
+        tot = 0
+        for oid in np.flatnonzero(frame.gt_valid):
+            mine = (frame.point_labels == oid + 1) & vis
+            if mine.sum() < 5:
+                continue
+            tot += mine.sum()
+            hit += (labels[mine] == oid + 1).sum()
+        assert tot > 0
+        assert hit / tot > 0.75, hit / tot
+
+    def test_tainted_points_exist(self, scene_cfg):
+        """The simulator must produce the failure mode Algorithm 1 targets."""
+        stream = scenes.SceneStream(scene_cfg, seed=3)
+        frame = next(stream.frames(1))
+        assert frame.tainted_mask.sum() > 10
+
+    def test_scene_dynamics(self, scene_cfg):
+        stream = scenes.SceneStream(scene_cfg, seed=4)
+        f0, f1 = list(stream.frames(2))
+        moved = np.abs(f1.gt_boxes[:, 0] - f0.gt_boxes[:, 0])
+        assert moved[f0.gt_valid & f1.gt_valid].max() > 0.01
+
+
+class TestTransformE2E:
+    def test_stream_accuracy(self, scene_cfg):
+        """Anchor at t=0, transform for the following frames; F1 vs GT must
+        stay well above random. This is the heart of the paper's claim."""
+        stream = scenes.SceneStream(scene_cfg, seed=11)
+        calib = _make_calib(scene_cfg, stream.tr, stream.p)
+        rng = np.random.default_rng(0)
+        state = transform.init_state(max_tracks=24, key=jax.random.key(0))
+        params = transform.TransformParams()
+        noise = scenes.DETECTOR_PROFILES["pointpillar"]
+
+        f1s = []
+        anchor_f1 = None
+        for t, frame in enumerate(stream.frames(8)):
+            if t == 0:
+                det3d, val3d = scenes.oracle_detect_3d(frame, rng, noise)
+                state, out = transform.anchor_step(
+                    state, jnp.asarray(det3d), jnp.asarray(val3d), calib, params)
+                anchor_f1 = float(metrics.f1_score(
+                    out.boxes3d, out.valid, jnp.asarray(frame.gt_boxes),
+                    jnp.asarray(frame.visible_gt()))[0])
+            else:
+                boxes2d, val2d, label_img = scenes.oracle_detect_2d(frame, rng)
+                state, out = transform.transform_step(
+                    state, jnp.asarray(frame.points), jnp.asarray(boxes2d),
+                    jnp.asarray(val2d), jnp.asarray(label_img), calib, params)
+                f1 = float(metrics.f1_score(
+                    out.boxes3d, out.valid, jnp.asarray(frame.gt_boxes),
+                    jnp.asarray(frame.visible_gt()))[0])
+                f1s.append(f1)
+        assert anchor_f1 > 0.65, anchor_f1  # calibrated detector noise
+        # Paper reports ~0.76-0.81 overall; demand >0.5 mean on transformed
+        # frames (no re-anchoring in this test).
+        assert np.mean(f1s) > 0.5, f1s
+
+    def test_tba_improves_accuracy(self, scene_cfg):
+        """Table 4: tracking-based association must help (>= within noise)."""
+        rng_seed = 5
+
+        def run(use_tba):
+            stream = scenes.SceneStream(scene_cfg, seed=rng_seed)
+            calib = _make_calib(scene_cfg, stream.tr, stream.p)
+            rng = np.random.default_rng(1)
+            state = transform.init_state(max_tracks=24, key=jax.random.key(1))
+            params = transform.TransformParams(use_tba=use_tba)
+            noise = scenes.DETECTOR_PROFILES["pointpillar"]
+            f1s = []
+            for t, frame in enumerate(stream.frames(6)):
+                if t == 0:
+                    det3d, val3d = scenes.oracle_detect_3d(frame, rng, noise)
+                    state, _ = transform.anchor_step(
+                        state, jnp.asarray(det3d), jnp.asarray(val3d), calib,
+                        params)
+                else:
+                    b2, v2, li = scenes.oracle_detect_2d(frame, rng)
+                    state, out = transform.transform_step(
+                        state, jnp.asarray(frame.points), jnp.asarray(b2),
+                        jnp.asarray(v2), jnp.asarray(li), calib, params)
+                    f1s.append(float(metrics.f1_score(
+                        out.boxes3d, out.valid, jnp.asarray(frame.gt_boxes),
+                        jnp.asarray(frame.visible_gt()))[0]))
+            return np.mean(f1s)
+
+        with_tba = run(True)
+        without = run(False)
+        assert with_tba >= without - 0.05, (with_tba, without)
+
+
+class TestScheduler:
+    def test_first_frame_is_anchor(self):
+        st = scheduler.init_scheduler(max_obj=8)
+        act = scheduler.scheduler_pre(st)
+        assert bool(act.run_as_anchor)
+
+    def test_test_frames_every_nt(self):
+        params = scheduler.SchedulerParams(n_t=4)
+        st = scheduler.init_scheduler(max_obj=8)
+        sent = []
+        boxes = jnp.zeros((8, 7))
+        valid = jnp.zeros((8,), bool)
+        for t in range(12):
+            act = scheduler.scheduler_pre(st, params)
+            st = scheduler.scheduler_post(
+                st, act, boxes, valid, jnp.bool_(t % 2 == 1), boxes, valid,
+                params)
+            sent.append(bool(act.send_test))
+        assert sum(sent) >= 2
+        # No two consecutive test frames.
+        assert not any(sent[i] and sent[i + 1] for i in range(len(sent) - 1))
+
+    def test_anchor_triggered_on_bad_f1(self):
+        params = scheduler.SchedulerParams(n_t=2, q_t=0.7)
+        st = scheduler.init_scheduler(max_obj=4)
+        ours = jnp.zeros((4, 7)).at[0].set(jnp.array([0, 0, 0, 4, 2, 1.5, 0.0]))
+        ours_valid = jnp.array([True, False, False, False])
+        # Cloud result: a completely different box -> F1 = 0.
+        cloud = jnp.zeros((4, 7)).at[0].set(
+            jnp.array([50, 50, 0, 4, 2, 1.5, 0.0]))
+        cloud_valid = jnp.array([True, False, False, False])
+        triggered = False
+        for t in range(8):
+            act = scheduler.scheduler_pre(st, params)
+            if bool(act.run_as_anchor) and t > 0:
+                triggered = True
+                break
+            st = scheduler.scheduler_post(
+                st, act, ours, ours_valid, jnp.bool_(True), cloud, cloud_valid,
+                params)
+        assert triggered
+
+    def test_no_anchor_on_good_f1(self):
+        params = scheduler.SchedulerParams(n_t=2, q_t=0.7)
+        st = scheduler.init_scheduler(max_obj=4)
+        box = jnp.zeros((4, 7)).at[0].set(jnp.array([0, 0, 0, 4, 2, 1.5, 0.0]))
+        valid = jnp.array([True, False, False, False])
+        anchors = 0
+        for t in range(10):
+            act = scheduler.scheduler_pre(st, params)
+            if bool(act.run_as_anchor):
+                anchors += 1
+            st = scheduler.scheduler_post(
+                st, act, box, valid, jnp.bool_(True), box, valid, params)
+        assert anchors == 1  # only the mandatory first frame
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-v"])
