@@ -19,6 +19,7 @@ MODULES = [
     "fig15_breakdown",
     "fig16_sensitivity",
     "fig17_efficiency",
+    "fleet_scaling",
     "roofline",
 ]
 

@@ -17,6 +17,7 @@ from __future__ import annotations
 
 from typing import NamedTuple
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import metrics
@@ -55,6 +56,14 @@ def init_scheduler(max_obj: int) -> SchedulerState:
         tests_sent=jnp.int32(0),
         anchors_triggered=jnp.int32(0),
     )
+
+
+def init_scheduler_fleet(n_streams: int, max_obj: int) -> SchedulerState:
+    """Batched scheduler state: one independent state machine per stream,
+    stacked on a leading stream axis. The state machine is pure jnp, so
+    vmapped :func:`scheduler_pre` / :func:`scheduler_post` advance all
+    streams in one traced call (see repro.fleet)."""
+    return jax.vmap(lambda _: init_scheduler(max_obj))(jnp.arange(n_streams))
 
 
 def scheduler_pre(state: SchedulerState,

@@ -142,3 +142,32 @@ def transform_step(state: MobyState, points: jnp.ndarray,
     out = FrameOutput(boxes3d=boxes3d, valid=valid, det_to_track=d2t,
                       track_boxes2d=pred2d)
     return MobyState(tracks=tracks, avg_size=state.avg_size, key=key), out
+
+
+def fused_step(state: MobyState, points: jnp.ndarray,
+               det_boxes2d: jnp.ndarray, det_valid: jnp.ndarray,
+               label_img: jnp.ndarray, cloud_boxes3d: jnp.ndarray,
+               cloud_valid: jnp.ndarray, is_anchor: jnp.ndarray,
+               calib: projection.Calibration,
+               params: TransformParams = TransformParams()
+               ) -> tuple[MobyState, FrameOutput]:
+    """One frame with its treatment resolved **on device**.
+
+    ``lax.cond`` selects between :func:`anchor_step` (ingest the cloud 3D
+    result) and :func:`transform_step` (2D->3D transformation) from a
+    traced ``is_anchor`` flag, so no host-side ``bool()`` sync is needed to
+    branch. Batched engines ``vmap`` this over streams — each stream takes
+    its own branch — and ``lax.scan`` can wrap it for device-resident
+    multi-frame runs (repro.fleet).
+    """
+    def _anchor(op):
+        st, _pts, _b2, _v2, _li, b3, v3 = op
+        return anchor_step(st, b3, v3, calib, params)
+
+    def _transform(op):
+        st, pts, b2, v2, li, _b3, _v3 = op
+        return transform_step(st, pts, b2, v2, li, calib, params)
+
+    return jax.lax.cond(is_anchor, _anchor, _transform,
+                        (state, points, det_boxes2d, det_valid, label_img,
+                         cloud_boxes3d, cloud_valid))

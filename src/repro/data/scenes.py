@@ -478,3 +478,26 @@ class SceneStream:
             frame = render_frame(self.state, self.cfg, self.tr, self.p)
             yield frame
             self.state = step_scene(self.state, self.cfg)
+
+
+class MultiStreamScenes:
+    """S concurrent vehicle streams sharing one sensor configuration.
+
+    Each stream is an independent world, decorrelated by seed; all streams
+    share the calibration implied by ``cfg`` (one fleet, one sensor SKU),
+    which is what lets batched engines use a single on-device calibration
+    for every stream. serving.tape records these streams into the stacked
+    (S, F, ...) arrays the fleet engine consumes.
+    """
+
+    SEED_STRIDE = 101  # keeps stream 0 equal to a single-stream run at seed
+
+    def __init__(self, cfg: SceneConfig, n_streams: int, seed: int = 0):
+        self.cfg = cfg
+        self.n_streams = n_streams
+        self.seed = seed
+        self.streams = [SceneStream(cfg, seed=self.stream_seed(i))
+                        for i in range(n_streams)]
+
+    def stream_seed(self, i: int) -> int:
+        return self.seed + self.SEED_STRIDE * i

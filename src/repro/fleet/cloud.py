@@ -1,0 +1,57 @@
+"""Cloud-side detector queue/batcher shared by the whole fleet.
+
+Anchor and test requests from many vehicles land on one cloud GPU. The
+server batches requests that arrive in the same scheduling round: a batch
+of ``b`` frames costs ``infer_s * (1 + marginal * (b - 1))`` — per-item
+time shrinks with batch size (amortized pre/post-processing and kernel
+launch), while *queueing delay* grows whenever the server is still busy
+with earlier batches. This is the fleet-level coupling the single-stream
+engine cannot express: one vehicle's anchor storm inflates every other
+vehicle's anchor latency.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class CloudBatcherConfig:
+    infer_s: float          # single-frame detector latency on the cloud GPU
+    marginal: float = 0.35  # marginal cost of each extra frame in a batch
+    max_batch: int = 32     # detector batch-size ceiling
+
+
+class CloudBatcher:
+    """Deterministic single-server batching queue (host-side model)."""
+
+    def __init__(self, cfg: CloudBatcherConfig):
+        self.cfg = cfg
+        self.busy_until = 0.0
+
+    def reset(self) -> None:
+        self.busy_until = 0.0
+
+    def batch_infer_time(self, batch_size: int) -> float:
+        b = max(min(batch_size, self.cfg.max_batch), 1)
+        return self.cfg.infer_s * (1.0 + self.cfg.marginal * (b - 1))
+
+    def submit_batch(self, arrive_times: Sequence[float]) -> List[float]:
+        """Serve one round of requests; returns per-request completion time.
+
+        Requests of a round are batched together (chunked at ``max_batch``,
+        earliest arrivals first); each chunk starts when both the server is
+        free and every request in the chunk has arrived.
+        """
+        if not len(arrive_times):
+            return []
+        order = sorted(range(len(arrive_times)), key=lambda i: arrive_times[i])
+        done = [0.0] * len(arrive_times)
+        for lo in range(0, len(order), self.cfg.max_batch):
+            chunk = order[lo:lo + self.cfg.max_batch]
+            start = max(self.busy_until, max(arrive_times[i] for i in chunk))
+            finish = start + self.batch_infer_time(len(chunk))
+            self.busy_until = finish
+            for i in chunk:
+                done[i] = finish
+        return done

@@ -1,0 +1,283 @@
+"""FleetEngine: batched multi-stream Moby serving.
+
+Runs S concurrent vehicle streams through a single device-resident step per
+frame (see fleet.step). Fleet-level resource contention is modelled on the
+host, where the network/cloud clocks live:
+
+* **Shared uplink** — all of a frame's anchor/test uploads split one cell's
+  trace bandwidth (runtime.netsim.SharedUplink), so transfer times degrade
+  with fleet size;
+* **Cloud batcher** — the round's requests are batched on one cloud GPU
+  (fleet.cloud.CloudBatcher): per-item inference amortizes, queueing delay
+  grows — the frame-offloading schedulers of different vehicles now
+  interact through anchor latency.
+
+Two run modes:
+
+* :meth:`FleetEngine.run` — orchestrated: one jitted dispatch + one packed
+  stats fetch per frame for the whole fleet, byte-accurate netsim timing.
+* :meth:`FleetEngine.run_scan` — benchmark: the entire run is one
+  ``lax.scan`` dispatch with an on-device network/cloud approximation.
+
+With S=1 both the inputs (serving.tape) and the timing reduce exactly to
+the single-stream ``MobyEngine`` — enforced by tests/test_fleet.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import projection, scheduler, transform
+from repro.data import scenes
+from repro.fleet import cloud as cloud_lib
+from repro.fleet import step as step_lib
+from repro.runtime import costmodel, netsim
+from repro.serving import engine as engine_lib
+from repro.serving import tape as tape_lib
+from repro.serving.common import (PC_BYTES, RESULT_BYTES, ComponentTimes,
+                                  onboard_transform_time)
+
+
+@dataclasses.dataclass
+class FleetRunResult:
+    """Per-stream-per-frame outcomes, shape (S, F) throughout."""
+    is_anchor: np.ndarray
+    send_test: np.ndarray
+    latency_s: np.ndarray
+    onboard_s: np.ndarray
+    f1: np.ndarray
+    precision: np.ndarray
+    recall: np.ndarray
+
+    @classmethod
+    def from_packed(cls, packed_sf: np.ndarray) -> "FleetRunResult":
+        """Build from a (S, F, COL_ONBOARD+1) packed stats array."""
+        p = packed_sf
+        return cls(is_anchor=p[:, :, step_lib.COL_IS_ANCHOR] > 0.5,
+                   send_test=p[:, :, step_lib.COL_SEND_TEST] > 0.5,
+                   latency_s=p[:, :, step_lib.COL_LATENCY],
+                   onboard_s=p[:, :, step_lib.COL_ONBOARD],
+                   f1=p[:, :, step_lib.COL_F1],
+                   precision=p[:, :, step_lib.COL_PRECISION],
+                   recall=p[:, :, step_lib.COL_RECALL])
+
+    @property
+    def n_streams(self) -> int:
+        return self.f1.shape[0]
+
+    @property
+    def mean_latency(self) -> float:
+        return float(np.mean(self.latency_s))
+
+    @property
+    def mean_onboard(self) -> float:
+        return float(np.mean(self.onboard_s))
+
+    @property
+    def mean_f1(self) -> float:
+        return float(np.mean(self.f1))
+
+    @property
+    def mean_anchor_latency(self) -> float:
+        a = self.latency_s[self.is_anchor]
+        return float(np.mean(a)) if a.size else 0.0
+
+    @property
+    def anchor_rate(self) -> float:
+        return float(np.mean(self.is_anchor))
+
+    def kinds(self, s: int) -> List[str]:
+        return ["anchor" if self.is_anchor[s, t] else
+                ("test" if self.send_test[s, t] else "transform")
+                for t in range(self.f1.shape[1])]
+
+    def stream_records(self, s: int) -> List[engine_lib.FrameRecord]:
+        """One stream's run as MobyEngine-style FrameRecords."""
+        ks = self.kinds(s)
+        return [engine_lib.FrameRecord(
+                    t, ks[t], float(self.latency_s[s, t]),
+                    float(self.onboard_s[s, t]), float(self.f1[s, t]),
+                    float(self.precision[s, t]), float(self.recall[s, t]))
+                for t in range(self.f1.shape[1])]
+
+
+class FleetEngine:
+    def __init__(self, scene_cfg: scenes.SceneConfig, detector: str,
+                 n_streams: int, trace: str = "belgium2", mode: str = "moby",
+                 use_fos: bool = True, use_tba: bool = True,
+                 tparams: Optional[transform.TransformParams] = None,
+                 sparams: Optional[scheduler.SchedulerParams] = None,
+                 seed: int = 0, comp: ComponentTimes = ComponentTimes(),
+                 tapes: Optional[Sequence[tape_lib.FrameTape]] = None,
+                 cloud_cfg: Optional[cloud_lib.CloudBatcherConfig] = None):
+        if mode not in ("moby", "moby_onboard"):
+            raise ValueError(f"FleetEngine serves moby modes, got {mode!r}")
+        self.cfg = scene_cfg
+        self.detector = detector
+        self.n_streams = n_streams
+        self.trace = trace
+        self.mode = mode
+        self.use_fos = use_fos
+        self.use_tba = use_tba
+        self.comp = comp
+        self.seed = seed
+        self.frame_dt = scene_cfg.dt
+        base = tparams or transform.TransformParams()
+        self.tparams = base._replace(use_tba=use_tba)
+        self.sparams = sparams or scheduler.SchedulerParams()
+        tr, p = scenes.make_calibration(scene_cfg)
+        self.calib = projection.Calibration(
+            tr=jnp.asarray(tr), p=jnp.asarray(p),
+            height=scene_cfg.img_h, width=scene_cfg.img_w)
+        self.uplink = netsim.SharedUplink(trace, seed=seed)
+        infer = costmodel.detector_latency(detector, costmodel.RTX_2080TI)
+        self.cloud_cfg = cloud_cfg or cloud_lib.CloudBatcherConfig(
+            infer_s=infer)
+        self.batcher = cloud_lib.CloudBatcher(self.cloud_cfg)
+        self._given_tapes = list(tapes) if tapes is not None else None
+        self._stack: Optional[tape_lib.FrameTape] = None
+        self._scan_cache = None
+        self._step = step_lib.make_fleet_step(
+            self.calib, self.tparams, self.sparams, use_fos)
+
+    # ------------------------------------------------------------------
+    def _stacked(self, n_frames: int) -> tape_lib.FrameTape:
+        if self._given_tapes is not None:
+            # Caller-supplied data plane: validate, never substitute.
+            if len(self._given_tapes) != self.n_streams:
+                raise ValueError(
+                    f"got {len(self._given_tapes)} tapes for "
+                    f"{self.n_streams} streams")
+            if self._given_tapes[0].n_frames < n_frames:
+                raise ValueError(
+                    f"tapes hold {self._given_tapes[0].n_frames} frames, "
+                    f"run asked for {n_frames}")
+        if self._stack is None or self._stack.points.shape[1] < n_frames:
+            tapes = self._given_tapes or tape_lib.record_fleet_tapes(
+                self.cfg, self.detector, n_frames, self.n_streams,
+                seed=self.seed)
+            self._stack = tape_lib.stack_tapes(tapes)
+        return tape_lib.FrameTape(*(a[:, :n_frames] for a in self._stack))
+
+    def _edge_infer(self) -> float:
+        return costmodel.detector_latency(self.detector,
+                                          costmodel.JETSON_TX2)
+
+    def _frame_inputs(self, stack: tape_lib.FrameTape,
+                      t: int) -> step_lib.FrameInputs:
+        f = tape_lib.FrameTape(*(a[:, t] for a in stack))
+        return step_lib.FrameInputs(
+            points=jnp.asarray(f.points), det2d=jnp.asarray(f.det2d),
+            val2d=jnp.asarray(f.val2d), label_img=jnp.asarray(f.label_img),
+            det3d=jnp.asarray(f.det3d), val3d=jnp.asarray(f.val3d),
+            gt_boxes=jnp.asarray(f.gt_boxes),
+            gt_visible=jnp.asarray(f.gt_visible))
+
+    # ------------------------------------------------------------------
+    def run(self, n_frames: int) -> FleetRunResult:
+        """Orchestrated serving: one device dispatch + one stats fetch per
+        frame for all S streams; byte-accurate shared-uplink/cloud timing."""
+        stack = self._stacked(n_frames)
+        s_n = self.n_streams
+        state = step_lib.init_fleet_state(s_n, self.cfg.max_obj)
+        walls = np.zeros(s_n)
+        inflight_at = np.full(s_n, np.inf)
+        self.uplink.reset()
+        self.batcher.reset()
+        out = np.zeros((s_n, n_frames, step_lib.COL_ONBOARD + 1), np.float32)
+
+        for t in range(n_frames):
+            inp = self._frame_inputs(stack, t)
+            arrived = walls >= inflight_at
+            state, packed = self._step(state, inp, jnp.asarray(arrived),
+                                       jnp.int32(t))
+            pk = np.asarray(packed)            # the one fetch per frame
+            is_anchor = pk[:, step_lib.COL_IS_ANCHOR] > 0.5
+            send_test = pk[:, step_lib.COL_SEND_TEST] > 0.5
+            inflight_at[arrived] = np.inf
+
+            # Fleet-level contention: this round's uploads share the cell
+            # uplink; its cloud requests are served as one batch.
+            cloud_anchor = is_anchor & (self.mode != "moby_onboard")
+            senders = cloud_anchor | send_test
+            n_up = int(senders.sum())
+            roundtrip = np.zeros(s_n)
+            if n_up:
+                up = self.uplink.transfer_time(PC_BYTES, n_sharers=n_up)
+                down = self.uplink.transfer_time(RESULT_BYTES,
+                                                 n_sharers=n_up)
+                idxs = np.flatnonzero(senders)
+                done = self.batcher.submit_batch(
+                    [self.uplink.t + up] * n_up)
+                for j, s in enumerate(idxs):
+                    roundtrip[s] = (done[j] - self.uplink.t) + down
+
+            lat = np.zeros(s_n)
+            onb = np.zeros(s_n)
+            for s in range(s_n):
+                if is_anchor[s]:
+                    lat[s] = self._edge_infer() \
+                        if self.mode == "moby_onboard" else roundtrip[s]
+                else:
+                    n_assoc = int(pk[s, step_lib.COL_N_ASSOC])
+                    n_new = max(int(pk[s, step_lib.COL_N_VALID]) - n_assoc, 0)
+                    onb[s] = onboard_transform_time(
+                        self.comp, n_assoc, n_new, self.use_tba, self.use_fos)
+                    lat[s] = onb[s]
+                if send_test[s]:
+                    inflight_at[s] = walls[s] + roundtrip[s]
+
+            out[:, t, :step_lib.N_COLS] = pk
+            out[:, t, step_lib.COL_LATENCY] = lat
+            out[:, t, step_lib.COL_ONBOARD] = onb
+            walls += np.where(is_anchor, np.maximum(self.frame_dt, lat),
+                              self.frame_dt)
+            self.uplink.advance(self.frame_dt)
+        return FleetRunResult.from_packed(out)
+
+    # ------------------------------------------------------------------
+    def run_scan(self, n_frames: int) -> FleetRunResult:
+        """Benchmark mode: the whole fleet run is ONE ``lax.scan`` dispatch,
+        with the network/cloud model evaluated on device."""
+        state, outs = self._scan_fn()(
+            step_lib.init_fleet_state(self.n_streams, self.cfg.max_obj),
+            self._scan_inputs(n_frames), n_frames)
+        packed = np.asarray(outs).transpose(1, 0, 2)   # (F,S,C) -> (S,F,C)
+        return FleetRunResult.from_packed(packed)
+
+    def _scan_inputs(self, n_frames: int) -> step_lib.FrameInputs:
+        stack = self._stacked(n_frames)
+        # (S, F, ...) -> (F, S, ...) device arrays for scan's leading axis.
+        return step_lib.FrameInputs(
+            points=jnp.asarray(stack.points.swapaxes(0, 1)),
+            det2d=jnp.asarray(stack.det2d.swapaxes(0, 1)),
+            val2d=jnp.asarray(stack.val2d.swapaxes(0, 1)),
+            label_img=jnp.asarray(stack.label_img.swapaxes(0, 1)),
+            det3d=jnp.asarray(stack.det3d.swapaxes(0, 1)),
+            val3d=jnp.asarray(stack.val3d.swapaxes(0, 1)),
+            gt_boxes=jnp.asarray(stack.gt_boxes.swapaxes(0, 1)),
+            gt_visible=jnp.asarray(stack.gt_visible.swapaxes(0, 1)))
+
+    def _scan_fn(self):
+        if self._scan_cache is not None:
+            return self._scan_cache
+        net = step_lib.ScanNetParams(
+            bw_mbps=jnp.asarray(netsim.synthesize_trace(self.trace,
+                                                        seed=self.seed),
+                                jnp.float32),
+            trace_dt=0.1, rtt_s=self.uplink.rtt_s, frame_dt=self.frame_dt,
+            pc_mbits=PC_BYTES * 8 / 1e6,
+            result_mbits=RESULT_BYTES * 8 / 1e6,
+            infer_s=self.cloud_cfg.infer_s,
+            marginal=self.cloud_cfg.marginal,
+            max_batch=self.cloud_cfg.max_batch)
+        self._scan_cache = step_lib.make_fleet_scan(
+            self.n_streams, self.calib, self.tparams, self.sparams,
+            self.comp, net, self.use_fos,
+            onboard_anchors=self.mode == "moby_onboard",
+            edge_infer_s=self._edge_infer())
+        return self._scan_cache

@@ -1,0 +1,224 @@
+"""Device-resident fleet stepping: S streams, one dispatch per frame.
+
+:func:`make_fleet_step` builds a jitted function advancing every stream in
+one call — ``jax.vmap`` over streams of the fused (``lax.cond``-selected)
+anchor/transform step plus the vmapped frame-offloading scheduler. The host
+supplies only test-arrival flags (it owns the network clock) and fetches
+one small packed stats array per frame, replacing the seed engine's ~3 jit
+calls and several ``.item()`` syncs *per stream-frame*.
+
+:func:`make_fleet_scan` wraps the same step in ``lax.scan`` over frames
+with an on-device network/cloud time model, so an entire fleet run is a
+single dispatch (benchmark mode).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import metrics, scheduler, transform
+from repro.serving.common import ComponentTimes
+
+# Columns of the packed per-stream stats row (the one host fetch per frame).
+COL_IS_ANCHOR = 0
+COL_SEND_TEST = 1
+COL_F1 = 2
+COL_PRECISION = 3
+COL_RECALL = 4
+COL_N_ASSOC = 5
+COL_N_VALID = 6
+N_COLS = 7
+# Scan mode appends two more columns (modelled times).
+COL_LATENCY = 7
+COL_ONBOARD = 8
+
+
+class FrameInputs(NamedTuple):
+    """One frame of per-stream inputs; every array has a leading S axis
+    when passed to the vmapped step (see serving.tape for the recording)."""
+    points: jnp.ndarray      # (S, N, 3)
+    det2d: jnp.ndarray       # (S, D, 4)
+    val2d: jnp.ndarray       # (S, D)
+    label_img: jnp.ndarray   # (S, H, W)
+    det3d: jnp.ndarray       # (S, D, 7)
+    val3d: jnp.ndarray       # (S, D)
+    gt_boxes: jnp.ndarray    # (S, D, 7)
+    gt_visible: jnp.ndarray  # (S, D)
+
+
+class FleetState(NamedTuple):
+    """All device-resident per-stream state, stacked on a leading S axis."""
+    moby: transform.MobyState          # tracker + avg size + PRNG key
+    sched: scheduler.SchedulerState    # frame-offloading state machine
+    inflight_boxes: jnp.ndarray        # (S, D, 7) latched test payloads
+    inflight_valid: jnp.ndarray        # (S, D)
+
+
+def init_fleet_state(n_streams: int, max_obj: int,
+                     key_base: int = 0) -> FleetState:
+    """Stream i's PRNG seed is ``key_base + i`` so stream 0 of a fleet
+    matches a single-stream engine seeded with ``key_base`` (parity)."""
+    keys = jax.vmap(jax.random.key)(key_base + jnp.arange(n_streams))
+    moby = jax.vmap(lambda k: transform.init_state(2 * max_obj, k))(keys)
+    sched = scheduler.init_scheduler_fleet(n_streams, max_obj)
+    return FleetState(
+        moby=moby, sched=sched,
+        inflight_boxes=jnp.zeros((n_streams, max_obj, 7), jnp.float32),
+        inflight_valid=jnp.zeros((n_streams, max_obj), bool))
+
+
+def _stream_step(state: FleetState, inp: FrameInputs,
+                 test_arrived: jnp.ndarray, t: jnp.ndarray,
+                 calib, params, sparams, use_fos: bool):
+    """One stream, one frame — fully traceable (no host branching)."""
+    if use_fos:
+        actions = scheduler.scheduler_pre(state.sched, sparams)
+    else:
+        actions = scheduler.SchedulerActions(send_test=jnp.bool_(False),
+                                             run_as_anchor=t == 0)
+    mstate, out = transform.fused_step(
+        state.moby, inp.points, inp.det2d, inp.val2d, inp.label_img,
+        inp.det3d, inp.val3d, actions.run_as_anchor, calib, params)
+
+    # The cloud's answer for an in-flight test frame is that frame's own 3D
+    # detections, latched on-device at send time — the host only supplies
+    # the *arrival timing* (it owns the network clock).
+    tb = jnp.where(test_arrived, state.inflight_boxes, state.sched.buf_boxes)
+    tv = jnp.where(test_arrived, state.inflight_valid, state.sched.buf_valid)
+    sched_state = state.sched
+    if use_fos:
+        sched_state = scheduler.scheduler_post(
+            sched_state, actions, out.boxes3d, out.valid, test_arrived,
+            tb, tv, sparams)
+    new_ib = jnp.where(actions.send_test, inp.det3d, state.inflight_boxes)
+    new_iv = jnp.where(actions.send_test, inp.val3d, state.inflight_valid)
+
+    f1, prec, rec = metrics.f1_score(out.boxes3d, out.valid,
+                                     inp.gt_boxes, inp.gt_visible)
+    n_assoc = jnp.sum((out.det_to_track >= 0) & out.valid)
+    n_valid = jnp.sum(out.valid)
+    packed = jnp.stack([
+        actions.run_as_anchor.astype(jnp.float32),
+        actions.send_test.astype(jnp.float32),
+        f1, prec, rec,
+        n_assoc.astype(jnp.float32), n_valid.astype(jnp.float32)])
+    return FleetState(mstate, sched_state, new_ib, new_iv), packed
+
+
+def make_fleet_step(calib, params, sparams, use_fos: bool = True):
+    """Jitted (state, FrameInputs[S], test_arrived[S], t) -> (state, (S, N_COLS))."""
+    step = functools.partial(_stream_step, calib=calib, params=params,
+                             sparams=sparams, use_fos=use_fos)
+    return jax.jit(jax.vmap(step, in_axes=(0, 0, 0, None)))
+
+
+def onboard_time_vec(comp: ComponentTimes, n_assoc: jnp.ndarray,
+                     n_new: jnp.ndarray, use_tba: bool,
+                     use_fos: bool) -> jnp.ndarray:
+    """Traceable twin of serving.common.onboard_transform_time."""
+    t = comp.seg_2d + comp.point_proj + comp.filtration
+    total = jnp.maximum(n_assoc + n_new, 1.0)
+    frac_new = n_new / total
+    t = t + frac_new * comp.bbox_est_new + (1 - frac_new) * comp.bbox_est_assoc
+    if use_tba:
+        t = t + comp.tba
+    if use_fos:
+        t = t + comp.fos
+    return t
+
+
+class ScanNetParams(NamedTuple):
+    """On-device network + cloud model for scan (benchmark) mode.
+
+    A one-tick fair-share approximation of SharedUplink + CloudBatcher:
+    transfer time is rtt + bits / (trace bandwidth / concurrent senders),
+    and same-frame cloud requests form one batch on a single server.
+    """
+    bw_mbps: jnp.ndarray       # (T,) synthesized cell-uplink trace
+    trace_dt: float
+    rtt_s: float
+    frame_dt: float
+    pc_mbits: float            # LiDAR frame upload size
+    result_mbits: float        # detections download size
+    infer_s: float             # cloud detector, batch of 1
+    marginal: float            # marginal batch cost (CloudBatcherConfig)
+    max_batch: int             # detector batch-size ceiling (chunks beyond)
+
+
+def make_fleet_scan(n_streams: int, calib, params, sparams,
+                    comp: ComponentTimes, net: ScanNetParams,
+                    use_fos: bool = True, onboard_anchors: bool = False,
+                    edge_infer_s: float = 0.0):
+    """Jitted (state, FrameInputs stacked (F, S, ...), n_frames) ->
+    (state, (F, S, N_COLS + 2)) — a whole fleet run in one dispatch.
+
+    ``onboard_anchors`` mirrors the engine's ``moby_onboard`` mode: anchor
+    frames run the 3D detector on the edge (``edge_infer_s``) and do not
+    contend for the uplink/cloud; test frames still go to the cloud.
+    """
+    step = functools.partial(_stream_step, calib=calib, params=params,
+                             sparams=sparams, use_fos=use_fos)
+    vstep = jax.vmap(step, in_axes=(0, 0, 0, None))
+
+    def body(carry, xs):
+        state, walls, inflight_at, busy = carry
+        t, inp = xs
+        test_arrived = walls >= inflight_at
+        state, packed = vstep(state, inp, test_arrived, t)
+        is_anchor = packed[:, COL_IS_ANCHOR] > 0.5
+        send_test = packed[:, COL_SEND_TEST] > 0.5
+
+        # Shared uplink: all of this frame's senders split the cell rate
+        # (on-board anchors stay off the network).
+        cloud_anchor = jnp.zeros_like(is_anchor) if onboard_anchors \
+            else is_anchor
+        n_up = jnp.sum(cloud_anchor | send_test)
+        net_t = t.astype(jnp.float32) * net.frame_dt
+        idx = ((net_t + net.rtt_s) / net.trace_dt).astype(jnp.int32) \
+            % net.bw_mbps.shape[0]
+        share = net.bw_mbps[idx] / jnp.maximum(n_up, 1).astype(jnp.float32)
+        up = net.rtt_s + net.pc_mbits / share
+        down = net.rtt_s + net.result_mbits / share
+
+        # Cloud batcher: the round's requests are served on one server,
+        # chunked at max_batch like CloudBatcher (approximation: every
+        # request completes with the round's last chunk).
+        start = jnp.maximum(busy, net_t + up)
+        n_req = jnp.maximum(n_up, 1).astype(jnp.float32)
+        b_eff = jnp.minimum(n_req, float(net.max_batch))
+        n_chunks = jnp.ceil(n_req / float(net.max_batch))
+        infer_b = n_chunks * net.infer_s * (1.0 + net.marginal * (b_eff - 1))
+        done = start + infer_b
+        busy = jnp.where(n_up > 0, done, busy)
+        roundtrip = (done - net_t) + down
+
+        n_assoc = packed[:, COL_N_ASSOC]
+        n_new = jnp.maximum(packed[:, COL_N_VALID] - n_assoc, 0.0)
+        onboard = onboard_time_vec(comp, n_assoc, n_new,
+                                   params.use_tba, use_fos)
+        anchor_latency = edge_infer_s if onboard_anchors else roundtrip
+        latency = jnp.where(is_anchor, anchor_latency, onboard)
+        onboard = jnp.where(is_anchor, 0.0, onboard)
+
+        inflight_at = jnp.where(test_arrived, jnp.inf, inflight_at)
+        inflight_at = jnp.where(send_test, walls + roundtrip, inflight_at)
+        walls = walls + jnp.where(is_anchor,
+                                  jnp.maximum(net.frame_dt, latency),
+                                  net.frame_dt)
+        out = jnp.concatenate(
+            [packed, latency[:, None], onboard[:, None]], axis=1)
+        return (state, walls, inflight_at, busy), out
+
+    def run(state, stacked: FrameInputs, n_frames: int):
+        carry = (state,
+                 jnp.zeros((n_streams,), jnp.float32),
+                 jnp.full((n_streams,), jnp.inf, jnp.float32),
+                 jnp.float32(0.0))
+        ts = jnp.arange(n_frames, dtype=jnp.int32)
+        (state, _, _, _), outs = jax.lax.scan(body, carry, (ts, stacked))
+        return state, outs
+
+    return jax.jit(run, static_argnames=("n_frames",))

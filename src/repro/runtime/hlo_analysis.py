@@ -145,3 +145,27 @@ def collective_bytes(hlo_lines: Iterable[str]) -> CollectiveStats:
 
 def collective_bytes_from_text(hlo_text: str) -> CollectiveStats:
     return collective_bytes(hlo_text.splitlines())
+
+
+def compiled_hlo_text(fn, mesh, in_specs, out_spec, avals) -> str:
+    """Optimized HLO text of ``fn`` compiled under ``mesh``.
+
+    Shardings are expressed as explicit ``NamedSharding``s on the jit
+    boundary — the stable ``jax.sharding`` surface — rather than the
+    removed ``jax.set_mesh`` context-manager API.
+
+    Args:
+      fn: function to lower.
+      mesh: a ``jax.sharding.Mesh``.
+      in_specs: one ``PartitionSpec`` per positional argument.
+      out_spec: ``PartitionSpec`` for the (single) output.
+      avals: one ``jax.ShapeDtypeStruct`` per positional argument.
+    """
+    import jax
+    from jax.sharding import NamedSharding
+
+    jitted = jax.jit(
+        fn,
+        in_shardings=tuple(NamedSharding(mesh, s) for s in in_specs),
+        out_shardings=NamedSharding(mesh, out_spec))
+    return jitted.lower(*avals).compile().as_text()

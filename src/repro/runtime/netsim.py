@@ -67,14 +67,21 @@ class NetworkSim:
     def advance(self, seconds: float):
         self.t += seconds
 
-    def transfer_time(self, n_bytes: int, start_t: float = None) -> float:
-        """Seconds to push n_bytes starting at start_t (default: now)."""
+    def transfer_time(self, n_bytes: int, start_t: float = None, *,
+                      n_sharers: int = 1) -> float:
+        """Seconds to push n_bytes starting at start_t (default: now).
+
+        ``n_sharers`` concurrent senders split the trace bandwidth into
+        equal fair shares (see :class:`SharedUplink`); the default of 1
+        is the single-vehicle case.
+        """
         t = self.t if start_t is None else start_t
+        share = 1.0 / max(int(n_sharers), 1)
         remaining = n_bytes * 8 / 1e6  # megabits
         elapsed = self.rtt_s           # connection/request overhead
         i = int((t + elapsed) / self.dt)
         while remaining > 0:
-            bw = self.trace[i % len(self.trace)]  # Mbps
+            bw = self.trace[i % len(self.trace)] * share  # fair-share Mbps
             sent = bw * self.dt
             if sent >= remaining:
                 elapsed += remaining / bw
@@ -90,6 +97,18 @@ class NetworkSim:
         d = self.transfer_time(n_bytes)
         self.t += d
         return d
+
+
+class SharedUplink(NetworkSim):
+    """A cell's uplink shared by N concurrent vehicle streams.
+
+    The trace bandwidth is the cell's total uplink capacity; pass
+    ``n_sharers`` to :meth:`NetworkSim.transfer_time` and each concurrent
+    sender gets an equal fair share (TCP-fair, the standard cellular
+    approximation), so per-transfer times degrade monotonically with
+    fleet-level contention. ``n_sharers=1`` reduces exactly to
+    :class:`NetworkSim` — single-vehicle behaviour is the fixed point.
+    """
 
 
 def validate_trace(name: str, tol: float = 0.15) -> dict:

@@ -1,1 +1,2 @@
-"""Serving tier: Moby edge-cloud engine + generic two-tier LM serving."""
+"""Serving tier: Moby edge-cloud engine, shared frame tapes/constants
+(consumed by the fleet subsystem too) + generic two-tier LM serving."""

@@ -1,0 +1,42 @@
+"""Shared serving-layer pieces: wire sizes, calibrated component times and
+the on-board latency model, used by both the single-stream ``MobyEngine``
+and the batched multi-stream ``FleetEngine`` (repro.fleet)."""
+from __future__ import annotations
+
+import dataclasses
+
+# Wire size of one LiDAR frame: the paper measures 6.96 Mbit/file average
+# (KITTI scans cropped to the camera FOV).
+PC_BYTES = int(6.96e6 / 8)
+RESULT_BYTES = 64 * 7 * 4  # detections back to the edge
+
+
+@dataclasses.dataclass
+class ComponentTimes:
+    """Calibrated on-board component times (TX2), seconds. Derived from
+    Fig. 15 / Table 4 as documented in benchmarks/fig15_breakdown.py."""
+    seg_2d: float = 0.033          # YOLOv5n instance segmentation
+    point_proj: float = 0.0127
+    filtration: float = 0.00201
+    bbox_est_assoc: float = 0.023
+    bbox_est_new: float = 0.0407   # two-hypothesis path (no prior)
+    tba: float = 0.00514
+    fos: float = 0.0006
+
+
+def onboard_transform_time(comp: ComponentTimes, n_assoc: float, n_new: float,
+                           use_tba: bool, use_fos: bool) -> float:
+    """On-board time of one transform frame (Fig. 15 component model).
+
+    Box estimation cost is a mix of the associated (single-hypothesis) and
+    new-object (two-hypothesis) paths, weighted by this frame's detections.
+    """
+    t = comp.seg_2d + comp.point_proj + comp.filtration
+    total = max(n_assoc + n_new, 1)
+    frac_new = n_new / total
+    t += frac_new * comp.bbox_est_new + (1 - frac_new) * comp.bbox_est_assoc
+    if use_tba:
+        t += comp.tba
+    if use_fos:
+        t += comp.fos
+    return t

@@ -30,11 +30,9 @@ import numpy as np
 from repro.core import metrics, projection, scheduler, transform
 from repro.data import scenes
 from repro.runtime import costmodel, netsim
-
-# Wire size of one LiDAR frame: the paper measures 6.96 Mbit/file average
-# (KITTI scans cropped to the camera FOV).
-PC_BYTES = int(6.96e6 / 8)
-RESULT_BYTES = 64 * 7 * 4  # detections back to the edge
+from repro.serving import tape as tape_lib
+from repro.serving.common import (PC_BYTES, RESULT_BYTES, ComponentTimes,
+                                  onboard_transform_time)
 
 
 # Process-wide jitted steps (params are static: plain NamedTuples).
@@ -43,17 +41,16 @@ _JIT_TRANSFORM = jax.jit(transform.transform_step,
 _JIT_ANCHOR = jax.jit(transform.anchor_step, static_argnames=("params",))
 
 
-@dataclasses.dataclass
-class ComponentTimes:
-    """Calibrated on-board component times (TX2), seconds. Derived from
-    Fig. 15 / Table 4 as documented in benchmarks/fig15_breakdown.py."""
-    seg_2d: float = 0.033          # YOLOv5n instance segmentation
-    point_proj: float = 0.0127
-    filtration: float = 0.00201
-    bbox_est_assoc: float = 0.023
-    bbox_est_new: float = 0.0407   # two-hypothesis path (no prior)
-    tba: float = 0.00514
-    fos: float = 0.0006
+@jax.jit
+def _frame_stats(boxes3d, valid, gt_boxes, gt_visible, det_to_track):
+    """All per-frame scalars the host loop needs, packed into one small
+    array so each frame costs a single host-device fetch (the former
+    ``int(jnp.sum(...))`` / ``float(f1)`` reads were one sync each)."""
+    f1, prec, rec = metrics.f1_score(boxes3d, valid, gt_boxes, gt_visible)
+    n_assoc = jnp.sum((det_to_track >= 0) & valid)
+    n_valid = jnp.sum(valid)
+    return jnp.stack([f1, prec, rec, n_assoc.astype(jnp.float32),
+                      n_valid.astype(jnp.float32)])
 
 
 @dataclasses.dataclass
@@ -91,7 +88,8 @@ class MobyEngine:
                  tparams: Optional[transform.TransformParams] = None,
                  sparams: Optional[scheduler.SchedulerParams] = None,
                  seed: int = 0,
-                 comp: ComponentTimes = ComponentTimes()):
+                 comp: ComponentTimes = ComponentTimes(),
+                 tape: Optional[tape_lib.FrameTape] = None):
         self.cfg = scene_cfg
         self.detector = detector
         self.mode = mode
@@ -109,6 +107,11 @@ class MobyEngine:
         self.rng = np.random.default_rng(seed + 1)
         self.noise = scenes.DETECTOR_PROFILES[detector]
         self.frame_dt = scene_cfg.dt
+        # Optional pre-recorded data plane (serving.tape). When set, all
+        # per-frame inputs come from the tape instead of live scene
+        # rendering + lazy oracle draws — the exact inputs FleetEngine
+        # consumes, which is what makes fleet parity testable.
+        self.tape = tape
         # Jitted per-frame steps, shared process-wide so many engines (one
         # per benchmark configuration) reuse one compilation cache.
         self._transform_step = _JIT_TRANSFORM
@@ -126,19 +129,14 @@ class MobyEngine:
         return costmodel.detector_latency(self.detector, costmodel.JETSON_TX2)
 
     def _onboard_transform_time(self, n_assoc: int, n_new: int) -> float:
-        c = self.comp
-        t = c.seg_2d + c.point_proj + c.filtration
-        total = max(n_assoc + n_new, 1)
-        frac_new = n_new / total
-        t += frac_new * c.bbox_est_new + (1 - frac_new) * c.bbox_est_assoc
-        if self.use_tba:
-            t += c.tba
-        if self.use_fos:
-            t += c.fos
-        return t
+        return onboard_transform_time(self.comp, n_assoc, n_new,
+                                      self.use_tba, self.use_fos)
 
     # ------------------------------------------------------------------
     def run(self, n_frames: int) -> RunResult:
+        if self.tape is not None and self.tape.n_frames < n_frames:
+            raise ValueError(f"tape holds {self.tape.n_frames} frames, "
+                             f"run asked for {n_frames}")
         if self.mode in ("edge_only", "cloud_only"):
             return self._run_baseline(n_frames)
         return self._run_moby(n_frames)
@@ -170,17 +168,24 @@ class MobyEngine:
         recompute_buf = []
         wall = 0.0
 
-        for t, frame in enumerate(self.stream.frames(n_frames)):
+        frame_iter = None if self.tape is not None \
+            else self.stream.frames(n_frames)
+
+        for t in range(n_frames):
+            tf = self.tape.frame(t) if self.tape is not None else None
+            frame = next(frame_iter) if frame_iter is not None else None
             actions = scheduler.scheduler_pre(sstate, self.sparams) if \
                 self.use_fos else scheduler.SchedulerActions(
                     jnp.bool_(False), jnp.bool_(t == 0))
             is_anchor = bool(actions.run_as_anchor)
             send_test = bool(actions.send_test) and self.use_fos
 
-            det3d = val3d = None
             if is_anchor:
-                det3d, val3d = scenes.oracle_detect_3d(frame, self.rng,
-                                                       self.noise)
+                if tf is not None:
+                    det3d, val3d = tf.det3d, tf.val3d
+                else:
+                    det3d, val3d = scenes.oracle_detect_3d(frame, self.rng,
+                                                           self.noise)
                 if self.mode == "moby_onboard":
                     latency = self._edge_infer()
                 else:
@@ -188,7 +193,6 @@ class MobyEngine:
                 mstate, out = self._anchor_step(
                     mstate, jnp.asarray(det3d), jnp.asarray(val3d),
                     self.calib, params=self.tparams)
-                onboard = 0.0
                 # Recomputation: replay buffered frames through the
                 # transformation while waiting — hidden latency, so it does
                 # not add to `latency`; we verify it fits in the wait.
@@ -197,24 +201,29 @@ class MobyEngine:
                 assert recompute_time <= max(latency, 1e-9) + 1.0
                 recompute_buf.clear()
             else:
-                boxes2d, val2d, label_img = scenes.oracle_detect_2d(
-                    frame, self.rng)
+                if tf is not None:
+                    boxes2d, val2d, label_img = tf.det2d, tf.val2d, \
+                        tf.label_img
+                    points = tf.points
+                else:
+                    boxes2d, val2d, label_img = scenes.oracle_detect_2d(
+                        frame, self.rng)
+                    points = frame.points
                 mstate, out = self._transform_step(
-                    mstate, jnp.asarray(frame.points), jnp.asarray(boxes2d),
+                    mstate, jnp.asarray(points), jnp.asarray(boxes2d),
                     jnp.asarray(val2d), jnp.asarray(label_img), self.calib,
                     params=self.tparams)
-                n_assoc = int(jnp.sum(out.det_to_track >= 0))
-                n_new = int(jnp.sum(out.valid)) - n_assoc
-                onboard = self._onboard_transform_time(n_assoc, max(n_new, 0))
-                latency = onboard
                 recompute_buf.append(t)
                 if len(recompute_buf) > 8:
                     recompute_buf.pop(0)
 
             # Test-frame transport (parallel with on-device processing).
             if send_test and inflight is None:
-                tdet, tval = scenes.oracle_detect_3d(frame, self.rng,
-                                                     self.noise)
+                if tf is not None:
+                    tdet, tval = tf.det3d, tf.val3d
+                else:
+                    tdet, tval = scenes.oracle_detect_3d(frame, self.rng,
+                                                         self.noise)
                 arrive = wall + self._cloud_roundtrip()
                 inflight = (arrive, jnp.asarray(tdet), jnp.asarray(tval))
 
@@ -228,13 +237,25 @@ class MobyEngine:
             if test_arrived:
                 inflight = None
 
-            f1, p, r = metrics.f1_score(
-                out.boxes3d, out.valid, jnp.asarray(frame.gt_boxes),
-                jnp.asarray(frame.visible_gt()))
+            # One packed fetch per frame: f1/precision/recall + the
+            # detection counts driving the on-board time model.
+            gt_boxes = tf.gt_boxes if tf is not None else frame.gt_boxes
+            gt_vis = tf.gt_visible if tf is not None else frame.visible_gt()
+            stats = np.asarray(_frame_stats(
+                out.boxes3d, out.valid, jnp.asarray(gt_boxes),
+                jnp.asarray(gt_vis), out.det_to_track))
+            f1, p, r = float(stats[0]), float(stats[1]), float(stats[2])
+            if is_anchor:
+                onboard = 0.0
+            else:
+                n_assoc = int(stats[3])
+                n_new = max(int(stats[4]) - n_assoc, 0)
+                onboard = self._onboard_transform_time(n_assoc, n_new)
+                latency = onboard
+
             kind = "anchor" if is_anchor else \
                 ("test" if send_test else "transform")
-            recs.append(FrameRecord(t, kind, latency, onboard, float(f1),
-                                    float(p), float(r)))
+            recs.append(FrameRecord(t, kind, latency, onboard, f1, p, r))
             wall += max(self.frame_dt, latency if is_anchor else 0.0)
             self.net.advance(self.frame_dt)
         return RunResult(recs)

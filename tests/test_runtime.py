@@ -195,10 +195,9 @@ class TestHloAnalysis:
         def f(x):
             return jnp.sum(x * 2)
 
-        with jax.set_mesh(mesh):
-            fn = jax.jit(f, in_shardings=P("d"), out_shardings=P())
-            txt = fn.lower(jax.ShapeDtypeStruct((128,), jnp.float32)) \
-                .compile().as_text()
+        txt = hlo_analysis.compiled_hlo_text(
+            f, mesh, in_specs=[P("d")], out_spec=P(),
+            avals=[jax.ShapeDtypeStruct((128,), jnp.float32)])
         stats = hlo_analysis.collective_bytes_from_text(txt)
         assert stats.total_bytes >= 0  # parser runs on real HLO
 
