@@ -20,6 +20,7 @@ MODULES = [
     "fig16_sensitivity",
     "fig17_efficiency",
     "fleet_scaling",
+    "kernel_backends",
     "roofline",
 ]
 

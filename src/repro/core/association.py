@@ -144,7 +144,7 @@ def auction_assign(benefit: jnp.ndarray, eps_final: float = 1e-4,
 
 def associate(track_boxes: jnp.ndarray, track_valid: jnp.ndarray,
               det_boxes: jnp.ndarray, det_valid: jnp.ndarray,
-              iou_thresh: float = 0.3):
+              iou_thresh: float = 0.3, backend: str | None = None):
     """Associate predicted track boxes with detections (both 2D aabb).
 
     Args:
@@ -153,6 +153,7 @@ def associate(track_boxes: jnp.ndarray, track_valid: jnp.ndarray,
       det_boxes: (D, 4) current detections.
       det_valid: (D,) bool.
       iou_thresh: association criterion (paper: 0.3).
+      backend: ops backend for the IoU cost matrix (kernels/iou2d).
 
     Returns:
       track_to_det: (T,) int32, detection index or -1.
@@ -161,7 +162,7 @@ def associate(track_boxes: jnp.ndarray, track_valid: jnp.ndarray,
     """
     t, d = track_boxes.shape[0], det_boxes.shape[0]
     n = max(t, d)
-    iou = box_ops.aabb_iou_2d(track_boxes, det_boxes)
+    iou = box_ops.aabb_iou_2d(track_boxes, det_boxes, backend=backend)
     pair_ok = track_valid[:, None] & det_valid[None, :]
     benefit = jnp.where(pair_ok, iou, 0.0)
     # Quantize so the auction's eps-optimality implies exact optimality on

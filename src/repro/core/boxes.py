@@ -13,6 +13,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import ops
+
 # Maximum vertices for the clipped polygon buffer. The intersection of two
 # convex quadrilaterals has at most 8 vertices; 16 leaves headroom for the
 # interleaved emit pattern.
@@ -147,17 +149,15 @@ def pairwise_iou_bev(boxes1: jnp.ndarray, boxes2: jnp.ndarray) -> jnp.ndarray:
     return jax.vmap(lambda a: jax.vmap(lambda b: iou_bev(a, b))(boxes2))(boxes1)
 
 
-def aabb_iou_2d(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
-    """Pairwise axis-aligned 2D IoU. a: (N, 4) [x1,y1,x2,y2]; b: (M, 4)."""
-    ax1, ay1, ax2, ay2 = a[:, 0:1], a[:, 1:2], a[:, 2:3], a[:, 3:4]
-    bx1, by1, bx2, by2 = b[None, :, 0], b[None, :, 1], b[None, :, 2], b[None, :, 3]
-    ix = jnp.maximum(jnp.minimum(ax2, bx2) - jnp.maximum(ax1, bx1), 0.0)
-    iy = jnp.maximum(jnp.minimum(ay2, by2) - jnp.maximum(ay1, by1), 0.0)
-    inter = ix * iy
-    aa = jnp.maximum((ax2 - ax1) * (ay2 - ay1), 0.0)
-    ab = jnp.maximum((bx2 - bx1) * (by2 - by1), 0.0)
-    union = aa + ab - inter
-    return jnp.where(union > 1e-9, inter / union, 0.0)
+def aabb_iou_2d(a: jnp.ndarray, b: jnp.ndarray,
+                backend: str | None = None) -> jnp.ndarray:
+    """Pairwise axis-aligned 2D IoU. a: (N, 4) [x1,y1,x2,y2]; b: (M, 4).
+
+    Dispatches through the ops registry (kernels/iou2d): the ref path is
+    the closed-form jnp broadcast, the pallas path tiles the (N, M)
+    matrix on the MXU.
+    """
+    return ops.iou2d(a, b, backend=backend)
 
 
 def points_in_box_bev(points_xy: jnp.ndarray, box: jnp.ndarray) -> jnp.ndarray:

@@ -15,37 +15,64 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro import ops
 
+
+@jax.tree_util.register_pytree_node_class
 class Calibration(NamedTuple):
     tr: jnp.ndarray  # (3, 4) LiDAR -> camera rigid transform
     p: jnp.ndarray   # (3, 4) camera projection matrix
     height: int      # label image height
     width: int       # label image width
 
+    # The image dims are *structural* (they size the Pallas grid and the
+    # flat gather index), so flatten them as static aux data — a jitted
+    # step receiving a Calibration argument traces tr/p but keeps
+    # height/width as Python ints.
+    def tree_flatten(self):
+        return (self.tr, self.p), (self.height, self.width)
 
-def project_points(points: jnp.ndarray, calib: Calibration):
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux[0], aux[1])
+
+
+def project_points(points: jnp.ndarray, calib: Calibration,
+                   backend: str | None = None):
     """Project LiDAR points to pixel coordinates.
 
     Args:
       points: (N, 3) LiDAR-frame points.
       calib: calibration.
+      backend: ops backend ("ref" / "pallas" / None = resolve).
 
     Returns:
       uv: (N, 2) float pixel coordinates.
       depth: (N,) camera-frame depth.
       visible: (N,) bool — in front of the camera and inside the image.
     """
-    n = points.shape[0]
-    hom = jnp.concatenate([points, jnp.ones((n, 1), dtype=points.dtype)], axis=-1)
-    cam = hom @ calib.tr.T                                    # (N, 3)
-    cam_h = jnp.concatenate([cam, jnp.ones((n, 1), dtype=points.dtype)], axis=-1)
-    pix = cam_h @ calib.p.T                                   # (N, 3)
-    depth = pix[:, 2]
-    w = jnp.where(jnp.abs(depth) < 1e-6, 1e-6, depth)
-    uv = pix[:, :2] / w[:, None]
-    visible = (depth > 0.1) & (uv[:, 0] >= 0) & (uv[:, 0] < calib.width) \
-        & (uv[:, 1] >= 0) & (uv[:, 1] < calib.height)
+    uv, depth, visible, _ = ops.point_proj(points, calib.tr, calib.p,
+                                           calib.height, calib.width,
+                                           backend=backend)
     return uv, depth, visible
+
+
+def project_and_label(points: jnp.ndarray, label_img: jnp.ndarray,
+                      calib: Calibration,
+                      backend: str | None = None) -> jnp.ndarray:
+    """Fused projection + visibility + flat-index + label gather.
+
+    The transformation hot path: one registered op computes the composed
+    calibration matmul, perspective divide, bounds test, and the flat
+    ``v*W+u`` gather index (the Pallas backend fuses all of it per point
+    tile); the instance-id gather itself stays an XLA gather.
+
+    Returns (N,) int32 instance labels (0 = background / invisible).
+    """
+    _, _, visible, flat = ops.point_proj(points, calib.tr, calib.p,
+                                         calib.height, calib.width,
+                                         backend=backend)
+    return ops.label_points(flat, visible, label_img)
 
 
 def label_points(uv: jnp.ndarray, visible: jnp.ndarray,

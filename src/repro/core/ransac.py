@@ -7,8 +7,10 @@ The paper uses 30 iterations (Fig. 16a/b sensitivity).
 The inlier-scoring step is the compute hot spot (30.1 % of on-board latency
 in Fig. 15 together with box estimation): for K hypotheses over P points it
 is a (K,3)x(3,P) matmul + compare + reduce, which maps directly onto the
-MXU — see ``repro.kernels.ransac_score`` for the Pallas kernel; this module
-provides the reference path and the sampling/selection logic.
+MXU. Scoring dispatches through the ops registry (``repro.ops``): the
+``ref`` backend is the jnp einsum below, the ``pallas`` backend is
+``repro.kernels.ransac_score``. This module keeps the sampling/selection
+logic, which is cheap and backend-independent.
 """
 from __future__ import annotations
 
@@ -16,6 +18,8 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+
+from repro import ops
 
 
 class RansacParams(NamedTuple):
@@ -62,18 +66,9 @@ def plane_from_triplets(points: jnp.ndarray, tri: jnp.ndarray):
     return n, d, ok
 
 
-def score_planes_ref(points: jnp.ndarray, valid: jnp.ndarray, normals: jnp.ndarray,
-                     offsets: jnp.ndarray, thresh: float) -> jnp.ndarray:
-    """Reference inlier counting: (K,) counts. dist = |points @ n^T + d|."""
-    # (P, K) distances via a single matmul — MXU-shaped.
-    dist = jnp.abs(points @ normals.T + offsets[None, :])
-    inl = (dist < thresh) & valid[:, None]
-    return jnp.sum(inl, axis=0)
-
-
 def ransac_plane(key: jax.Array, points: jnp.ndarray, valid: jnp.ndarray,
                  params: RansacParams = RansacParams(),
-                 score_fn=None) -> PlaneFit:
+                 backend: str | None = None) -> PlaneFit:
     """Fit the dominant (near-vertical) plane of one cluster.
 
     Args:
@@ -81,31 +76,40 @@ def ransac_plane(key: jax.Array, points: jnp.ndarray, valid: jnp.ndarray,
       points: (P, 3) buffer.
       valid: (P,) mask.
       params: RANSAC parameters.
-      score_fn: optional override for inlier counting with the same signature
-        as :func:`score_planes_ref` (used to swap in the Pallas kernel).
+      backend: ops backend for inlier scoring ("ref" / "pallas" / None).
 
     Returns: PlaneFit with the best plane and its inlier mask.
     """
-    score_fn = score_fn or score_planes_ref
-    tri = _sample_triplets(key, valid, params.num_iters)
-    normals, offsets, tri_ok = plane_from_triplets(points, tri)
-    counts = score_fn(points, valid, normals, offsets, params.inlier_thresh)
-    vertical = jnp.abs(normals[:, 2]) <= params.max_abs_nz
-    counts = jnp.where(tri_ok & vertical, counts, 0)
-    best = jnp.argmax(counts)
-    n_best = normals[best]
-    d_best = offsets[best]
-    dist = jnp.abs(points @ n_best + d_best)
-    inliers = (dist < params.inlier_thresh) & valid
-    num = counts[best]
-    ok = num >= 3
-    return PlaneFit(normal=n_best, offset=d_best, inliers=inliers,
-                    num_inliers=num, ok=ok)
+    fit = ransac_planes(key, points[None], valid[None], params,
+                        backend=backend, _presplit=True)
+    return jax.tree_util.tree_map(lambda x: x[0], fit)
 
 
 def ransac_planes(key: jax.Array, points: jnp.ndarray, valid: jnp.ndarray,
-                  params: RansacParams = RansacParams(), score_fn=None) -> PlaneFit:
-    """Vectorized over objects: points (O, P, 3), valid (O, P)."""
-    keys = jax.random.split(key, points.shape[0])
-    return jax.vmap(lambda k, p, v: ransac_plane(k, p, v, params, score_fn))(
-        keys, points, valid)
+                  params: RansacParams = RansacParams(),
+                  backend: str | None = None,
+                  _presplit: bool = False) -> PlaneFit:
+    """Vectorized over objects: points (O, P, 3), valid (O, P).
+
+    Sampling and selection vmap over the object axis; inlier scoring is
+    one batched (O, K, 3) x (O, 3, P) contraction dispatched through the
+    ops registry, so the Pallas kernel sees all objects at once.
+    """
+    o = points.shape[0]
+    keys = key[None] if _presplit else jax.random.split(key, o)
+    tri = jax.vmap(lambda k, v: _sample_triplets(k, v, params.num_iters))(
+        keys, valid)                                          # (O, K, 3)
+    normals, offsets, tri_ok = jax.vmap(plane_from_triplets)(points, tri)
+    counts = ops.ransac_score(points, valid, normals, offsets,
+                              params.inlier_thresh, backend=backend)
+    vertical = jnp.abs(normals[..., 2]) <= params.max_abs_nz
+    counts = jnp.where(tri_ok & vertical, counts, 0)          # (O, K)
+    best = jnp.argmax(counts, axis=1)
+    n_best = jnp.take_along_axis(normals, best[:, None, None], axis=1)[:, 0]
+    d_best = jnp.take_along_axis(offsets, best[:, None], axis=1)[:, 0]
+    dist = jnp.abs(jnp.einsum("opc,oc->op", points, n_best) + d_best[:, None])
+    inliers = (dist < params.inlier_thresh) & valid
+    num = jnp.take_along_axis(counts, best[:, None], axis=1)[:, 0]
+    ok = num >= 3
+    return PlaneFit(normal=n_best, offset=d_best, inliers=inliers,
+                    num_inliers=num, ok=ok)

@@ -34,7 +34,24 @@ class TransformParams(NamedTuple):
     iou_assoc: float = 0.3        # association criterion (paper: 0.3)
     pts_per_obj: int = 256        # cluster buffer size
     use_tba: bool = True          # tracking-based association on/off (Table 4)
-    ransac_score_fn: object = None  # optional Pallas-backed scorer
+    # Ops backend for the hot ops (point projection, IoU, RANSAC scoring):
+    # "ref" / "pallas" / "auto" (= MOBY_BACKEND env, else platform default).
+    # A plain string keeps the NamedTuple hashable for static jit args.
+    backend: str = "auto"
+
+
+def resolve_backend_params(params: TransformParams,
+                           backend: str | None = None) -> TransformParams:
+    """Apply an optional backend override, then pin "auto" to its resolved
+    value ("ref" / "pallas"). Pinning matters because TransformParams is a
+    static jit cache key: a later MOBY_BACKEND change must not be masked
+    by a cache hit on an unresolved "auto". Engines call this once at
+    construction.
+    """
+    from repro import ops
+    if backend is not None:
+        params = params._replace(backend=backend)
+    return params._replace(backend=ops.resolve_backend(params.backend))
 
 
 class MobyState(NamedTuple):
@@ -65,7 +82,7 @@ def anchor_step(state: MobyState, boxes3d: jnp.ndarray, valid: jnp.ndarray,
         b, calib.tr, calib.p))(boxes3d)
     tracks, pred2d = tracking.predict(state.tracks)
     t2d, d2t, _ = association.associate(pred2d, tracks.active, boxes2d, valid,
-                                        params.iou_assoc)
+                                        params.iou_assoc, params.backend)
     tracks = tracking.update(tracks, t2d, boxes2d, params.tracker)
     tracks, d2t = tracking.spawn(tracks, boxes2d, valid, d2t)
     tracks = tracking.set_box3d(tracks, d2t, boxes3d, valid)
@@ -100,7 +117,8 @@ def transform_step(state: MobyState, points: jnp.ndarray,
     tracks, pred2d = tracking.predict(state.tracks)
     if params.use_tba:
         t2d, d2t, _ = association.associate(pred2d, tracks.active, det_boxes2d,
-                                            det_valid, params.iou_assoc)
+                                            det_valid, params.iou_assoc,
+                                            params.backend)
         tracks = tracking.update(tracks, t2d, det_boxes2d, params.tracker)
         tracks, d2t = tracking.spawn(tracks, det_boxes2d, det_valid, d2t)
     else:
@@ -109,8 +127,9 @@ def transform_step(state: MobyState, points: jnp.ndarray,
         d2t = jnp.full((d,), -1, jnp.int32)
 
     # --- point projection (§3.3) ------------------------------------------
-    uv, _, vis = projection.project_points(points, calib)
-    labels = projection.label_points(uv, vis, label_img)
+    # Fused project + visibility + flat-index + label gather (ops backend).
+    labels = projection.project_and_label(points, label_img, calib,
+                                          params.backend)
     clusters, cvalid, _ = projection.build_clusters(points, labels, d,
                                                     params.pts_per_obj)
 
@@ -124,7 +143,7 @@ def transform_step(state: MobyState, points: jnp.ndarray,
 
     # --- RANSAC surface fitting --------------------------------------------
     fit = ransac.ransac_planes(sub, clusters, keep, params.ransac,
-                               params.ransac_score_fn)
+                               backend=params.backend)
 
     # --- 3D box estimation (Eqs. 1-2, Fig. 10) ------------------------------
     t_idx = jnp.clip(d2t, 0, state.tracks.x.shape[0] - 1)

@@ -113,7 +113,8 @@ class FleetEngine:
                  sparams: Optional[scheduler.SchedulerParams] = None,
                  seed: int = 0, comp: ComponentTimes = ComponentTimes(),
                  tapes: Optional[Sequence[tape_lib.FrameTape]] = None,
-                 cloud_cfg: Optional[cloud_lib.CloudBatcherConfig] = None):
+                 cloud_cfg: Optional[cloud_lib.CloudBatcherConfig] = None,
+                 backend: Optional[str] = None):
         if mode not in ("moby", "moby_onboard"):
             raise ValueError(f"FleetEngine serves moby modes, got {mode!r}")
         self.cfg = scene_cfg
@@ -127,7 +128,11 @@ class FleetEngine:
         self.seed = seed
         self.frame_dt = scene_cfg.dt
         base = tparams or transform.TransformParams()
-        self.tparams = base._replace(use_tba=use_tba)
+        # Ops backend threaded to every vmapped stream step via the static
+        # TransformParams ("ref" / "pallas"; None keeps tparams.backend).
+        # Resolved + pinned at construction (see resolve_backend_params).
+        self.tparams = transform.resolve_backend_params(
+            base._replace(use_tba=use_tba), backend)
         self.sparams = sparams or scheduler.SchedulerParams()
         tr, p = scenes.make_calibration(scene_cfg)
         self.calib = projection.Calibration(

@@ -10,6 +10,11 @@ calls and several ``.item()`` syncs *per stream-frame*.
 :func:`make_fleet_scan` wraps the same step in ``lax.scan`` over frames
 with an on-device network/cloud time model, so an entire fleet run is a
 single dispatch (benchmark mode).
+
+Both modes take their hot-op implementations (point projection, IoU,
+RANSAC scoring) from ``params.backend`` — the static TransformParams
+string resolved through the ops registry — so the whole vmapped fleet
+jits cleanly under either the ref or the Pallas backend.
 """
 from __future__ import annotations
 

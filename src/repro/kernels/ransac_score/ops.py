@@ -1,4 +1,4 @@
-"""Public wrapper: padding/layout + interpret switch + score_fn adapter."""
+"""Public wrapper: padding/layout + interpret switch."""
 from __future__ import annotations
 
 import functools
@@ -34,14 +34,3 @@ def ransac_score(points: jnp.ndarray, valid: jnp.ndarray,
     off = _pad_to(offsets, 1, _LANE, value=1e9)                # (O, K')
     out = ransac_score_pallas(pts_t, val, nrm, off, thresh, interpret)
     return out[:, :k]
-
-
-def make_score_fn(interpret: bool = True):
-    """Adapter matching repro.core.ransac.score_planes_ref's signature
-    (single object: (P,3),(P,),(K,3),(K,) -> (K,)) for use as
-    TransformParams.ransac_score_fn. Works under vmap via batching."""
-    def score(points, valid, normals, offsets, thresh):
-        out = ransac_score(points[None], valid[None], normals[None],
-                           offsets[None], float(thresh), interpret)
-        return out[0]
-    return score

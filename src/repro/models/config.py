@@ -34,6 +34,12 @@ class ArchConfig:
 
     # Attention kind
     attn_kind: str = "full"      # full | mla
+    # Ops backend for attention ("ref" / "pallas"). None resolves via
+    # MOBY_BACKEND / platform at first trace and is then cached with this
+    # config — deliberate: arch configs are built at import time, where
+    # eager pinning would freeze the env too early. Pass an explicit
+    # backend to control it per config.
+    backend: Optional[str] = None
     # MLA (DeepSeek-V2)
     q_lora: int = 0
     kv_lora: int = 0

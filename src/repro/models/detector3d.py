@@ -20,9 +20,8 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import ops
 from repro.core import boxes as box_ops
-from repro.kernels.pillar_scatter import ops as scatter_ops
-from repro.kernels.pillar_scatter import ref as scatter_ref
 from repro.models.params import ParamDef, fanin_init, ones_init, zeros_init
 
 
@@ -37,7 +36,11 @@ class PillarConfig:
     feat_dim: int = 32
     backbone_dims: tuple = (32, 64, 128)
     n_anchors: int = 2
-    use_kernel: bool = True       # pillar_scatter Pallas kernel vs ref
+    # Ops backend for pillar_scatter: "ref" / "pallas" / "auto". "auto"
+    # resolves via MOBY_BACKEND / platform at first trace and is cached
+    # with this config (configs are often module-level constants, so
+    # eager pinning would freeze the env too early).
+    backend: str = "auto"
     second_style: bool = False    # z-binned dense-voxel entry (SECOND)
     z_bins: int = 8
 
@@ -112,10 +115,7 @@ def forward(params, cfg: PillarConfig, points: jnp.ndarray,
     f, pid, ok = pillarize(cfg, points, valid)
     h = jax.nn.relu(f @ params["pnet_w"] + params["pnet_b"])      # (N, F)
     g = cfg.grid_h * cfg.grid_w
-    if cfg.use_kernel:
-        grid = scatter_ops.pillar_scatter(h, pid, ok, g)
-    else:
-        grid = scatter_ref.pillar_scatter_ref(h, pid, ok, g)
+    grid = ops.pillar_scatter(h, pid, ok, g, backend=cfg.backend)
     bev = grid.reshape(cfg.grid_h, cfg.grid_w, cfg.feat_dim)
 
     b = params["blocks"]

@@ -5,10 +5,11 @@ Conventions:
   ``<layer>_apply(params, ...) -> array``.
 * Parameters are stored fp32 (optimizer-canonical) and cast to the compute
   dtype at use; matmuls accumulate fp32 via ``preferred_element_type``.
-* Attention uses a chunked online-softmax (flash-style) path for long
-  sequences so 32k-prefill never materializes (S, S) scores; a dense path
-  is used for short sequences. The Pallas TPU kernel in
-  ``repro.kernels.flash_attention`` implements the same contract.
+* Attention dispatches through the ops backend registry (``repro.ops``):
+  the ``pallas`` backend runs the flash/decode TPU kernels, the ``ref``
+  backend keeps the jnp path below — dense scores for short sequences, a
+  chunked online-softmax for long ones so 32k-prefill never materializes
+  (S, S) scores. Both implement the same contract.
 """
 from __future__ import annotations
 
@@ -18,6 +19,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro import ops
 from repro.models.config import ArchConfig
 from repro.models.params import (ParamDef, fanin_init, normal_init, ones_init,
                                  zeros_init)
@@ -222,13 +224,24 @@ def _chunked_attention(q, k, v, causal: bool):
     return out[:, :sq]
 
 
-def multihead_attention(q, k, v, causal: bool):
+def multihead_attention(q, k, v, causal: bool, backend: str | None = None):
     """q: (B, Sq, H, hd); k: (B, Sk, KV, hd); v: (B, Sk, KV, vd).
 
     Returns (B, Sq, H, vd) — the value head dim may differ from the qk head
-    dim (MLA)."""
+    dim (MLA). Dispatch is a registry lookup: the pallas backend runs the
+    flash-attention kernel (requires vd == hd, so MLA's asymmetric-value
+    shape always takes the ref path); the ref backend picks dense vs
+    chunked by sequence length.
+    """
     b, sq, h, hd = q.shape
     kvh = k.shape[2]
+    kernel_ok = v.shape[-1] == hd and (not causal or sq == k.shape[1])
+    if kernel_ok and ops.resolve_backend(backend) == "pallas":
+        out = ops.flash_attention(q.transpose(0, 2, 1, 3),
+                                  k.transpose(0, 2, 1, 3),
+                                  v.transpose(0, 2, 1, 3), causal,
+                                  backend="pallas")
+        return out.transpose(0, 2, 1, 3)
     g = h // kvh
     qg = q.reshape(b, sq, kvh, g, hd)
     if sq <= _DENSE_ATTN_MAX_SEQ and k.shape[1] <= _DENSE_ATTN_MAX_SEQ:
@@ -255,18 +268,22 @@ def attn_apply(p, x, cfg: ArchConfig, positions, causal: bool = True,
         v = v + cast(p["bv"], cfg)
     if rope_on and kv_x is None:
         q, k = position_encode(q, k, cfg, positions)
-    out = multihead_attention(q, k, v, causal)
+    out = multihead_attention(q, k, v, causal, backend=cfg.backend)
     return jnp.einsum("bshk,hkd->bsd", out, cast(p["wo"], cfg),
                       preferred_element_type=jnp.float32).astype(cfg.dtype)
 
 
 def attn_decode_apply(p, x, cfg: ArchConfig, cache_k, cache_v, cache_pos,
-                      positions):
+                      positions, backend: str | None = None):
     """Single-token decode with KV cache.
 
     x: (B, 1, D); cache_k/v: (B, S_max, KV, hd); cache_pos: (B,) int32
     current lengths. Returns (out (B, 1, D), cache_k, cache_v).
+    ``backend`` selects the decode-attention implementation (same contract
+    as :func:`multihead_attention`; defaults to ``cfg.backend``).
     """
+    if backend is None:
+        backend = cfg.backend
     b = x.shape[0]
     q = jnp.einsum("bsd,dhk->bshk", x, cast(p["wq"], cfg))
     k = jnp.einsum("bsd,dhk->bshk", x, cast(p["wk"], cfg))
@@ -285,18 +302,28 @@ def attn_decode_apply(p, x, cfg: ArchConfig, cache_k, cache_v, cache_pos,
                   cache_pos.astype(jnp.int32))
     cache_v = upd(cache_v, v.astype(cache_v.dtype), cache_pos.astype(jnp.int32))
     h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
-    g = h // kv
-    qg = q.reshape(b, kv, g, hd)
-    scale = hd ** -0.5
-    s = jnp.einsum("bkgh,bskh->bkgs", qg, cache_k,
-                   preferred_element_type=jnp.float32) * scale
-    smax = cache_k.shape[1]
-    mask = jnp.arange(smax)[None] <= cache_pos[:, None]  # (B, S)
-    s = jnp.where(mask[:, None, None], s, _NEG_INF)
-    w = jax.nn.softmax(s, axis=-1).astype(cfg.dtype)
-    out = jnp.einsum("bkgs,bskh->bkgh", w, cache_v,
-                     preferred_element_type=jnp.float32).astype(cfg.dtype)
-    out = out.reshape(b, 1, h, hd)
+    if ops.resolve_backend(backend) == "pallas":
+        # Registry lookup: decode-attention kernel over the cache, attending
+        # [0, cache_pos] inclusive (the new kv was just written there).
+        att = ops.decode_attention(q[:, 0],
+                                   cache_k.transpose(0, 2, 1, 3),
+                                   cache_v.transpose(0, 2, 1, 3),
+                                   cache_pos.astype(jnp.int32) + 1,
+                                   backend="pallas")
+        out = att[:, None].astype(cfg.dtype)
+    else:
+        g = h // kv
+        qg = q.reshape(b, kv, g, hd)
+        scale = hd ** -0.5
+        s = jnp.einsum("bkgh,bskh->bkgs", qg, cache_k,
+                       preferred_element_type=jnp.float32) * scale
+        smax = cache_k.shape[1]
+        mask = jnp.arange(smax)[None] <= cache_pos[:, None]  # (B, S)
+        s = jnp.where(mask[:, None, None], s, _NEG_INF)
+        w = jax.nn.softmax(s, axis=-1).astype(cfg.dtype)
+        out = jnp.einsum("bkgs,bskh->bkgh", w, cache_v,
+                         preferred_element_type=jnp.float32).astype(cfg.dtype)
+        out = out.reshape(b, 1, h, hd)
     out = jnp.einsum("bshk,hkd->bsd", out, cast(p["wo"], cfg))
     return out.astype(cfg.dtype), cache_k, cache_v
 

@@ -87,7 +87,8 @@ def mla_apply(p, x, cfg: ArchConfig, positions, causal: bool = True):
     k_rope_b = jnp.broadcast_to(k_rope, k_rope.shape[:2] + (h, rope))
     qf = jnp.concatenate([q_nope, q_rope], axis=-1)
     kf = jnp.concatenate([k_nope, k_rope_b], axis=-1)
-    out = multihead_attention(qf, kf, v, causal)             # KV == H heads
+    out = multihead_attention(qf, kf, v, causal,
+                              backend=cfg.backend)           # KV == H heads
     return jnp.einsum("bshk,hkd->bsd", out, cast(p["wo"], cfg),
                       preferred_element_type=jnp.float32).astype(cfg.dtype)
 

@@ -1,0 +1,86 @@
+"""Backend registry for the hot-path ops.
+
+Every compute hot spot (point projection, IoU matrix, RANSAC scoring,
+pillar scatter, attention) is registered here under a short name with one
+implementation per backend:
+
+* ``ref``    — pure-jnp reference (the oracle the kernels are tested
+  against; also the fastest path on CPU hosts).
+* ``pallas`` — the Pallas TPU kernel. Off-TPU the kernel body runs in
+  interpret mode automatically, so the pallas path is *correct*
+  everywhere and *fast* on TPU.
+
+Resolution order for the active backend:
+
+1. an explicit ``backend=`` argument ("ref" / "pallas"),
+2. the ``MOBY_BACKEND`` environment variable,
+3. the platform default: "pallas" on TPU, "ref" elsewhere.
+
+``"auto"`` (or ``None``) means "defer to 2-3". Consumers carry the
+backend as a plain string (hashable, so it can live in NamedTuple params
+used as static jit arguments); resolution happens at trace time.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Callable, Dict
+
+BACKENDS = ("ref", "pallas")
+AUTO = "auto"
+_ENV_VAR = "MOBY_BACKEND"
+
+# name -> {"ref": fn, "pallas": fn}
+_REGISTRY: Dict[str, Dict[str, Callable]] = {}
+
+
+@functools.lru_cache(maxsize=1)
+def on_tpu() -> bool:
+    import jax
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:  # no backend at all (docs builds etc.)
+        return False
+
+
+def default_interpret() -> bool:
+    """Pallas interpret mode: on unless a real TPU is attached."""
+    return not on_tpu()
+
+
+def default_backend() -> str:
+    """Backend used when nothing was requested explicitly."""
+    env = os.environ.get(_ENV_VAR, "").strip().lower()
+    if env:
+        if env not in BACKENDS:
+            raise ValueError(
+                f"{_ENV_VAR}={env!r}: expected one of {BACKENDS}")
+        return env
+    return "pallas" if on_tpu() else "ref"
+
+
+def resolve_backend(backend: str | None = None) -> str:
+    """Explicit argument > MOBY_BACKEND env > platform default."""
+    if backend is None or backend == AUTO or backend == "":
+        return default_backend()
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}: expected one of "
+                         f"{BACKENDS} (or 'auto')")
+    return backend
+
+
+def register_op(name: str, *, ref: Callable, pallas: Callable) -> None:
+    """Register both implementations of a hot op. Idempotent per name."""
+    _REGISTRY[name] = {"ref": ref, "pallas": pallas}
+
+
+def get_impl(name: str, backend: str | None = None) -> Callable:
+    """Look up an op's implementation for a (resolved) backend."""
+    if name not in _REGISTRY:
+        raise KeyError(f"op {name!r} is not registered; known ops: "
+                       f"{sorted(_REGISTRY)}")
+    return _REGISTRY[name][resolve_backend(backend)]
+
+
+def list_ops() -> list[str]:
+    return sorted(_REGISTRY)

@@ -89,7 +89,8 @@ class MobyEngine:
                  sparams: Optional[scheduler.SchedulerParams] = None,
                  seed: int = 0,
                  comp: ComponentTimes = ComponentTimes(),
-                 tape: Optional[tape_lib.FrameTape] = None):
+                 tape: Optional[tape_lib.FrameTape] = None,
+                 backend: Optional[str] = None):
         self.cfg = scene_cfg
         self.detector = detector
         self.mode = mode
@@ -102,7 +103,10 @@ class MobyEngine:
             tr=jnp.asarray(self.stream.tr), p=jnp.asarray(self.stream.p),
             height=scene_cfg.img_h, width=scene_cfg.img_w)
         base = tparams or transform.TransformParams()
-        self.tparams = base._replace(use_tba=use_tba)
+        # Ops backend for the transformation hot path ("ref" / "pallas");
+        # None keeps tparams.backend. Resolved + pinned at construction.
+        self.tparams = transform.resolve_backend_params(
+            base._replace(use_tba=use_tba), backend)
         self.sparams = sparams or scheduler.SchedulerParams()
         self.rng = np.random.default_rng(seed + 1)
         self.noise = scenes.DETECTOR_PROFILES[detector]

@@ -23,6 +23,60 @@ from typing import Any, Callable, List, Optional
 import numpy as np
 
 
+def make_moby_tiers(calib, tparams=None, backend: Optional[str] = None,
+                    comp=None, anchor_cost_s: float = 0.25):
+    """Bind Moby itself into the two-tier pattern, with an explicit ops
+    backend threaded through ``TransformParams`` to the jitted steps.
+
+    Inputs ``x`` are per-frame tuples
+    ``(points, det2d, val2d, label_img, det3d, val3d, gt_boxes, gt_vis)``
+    (the serving.tape column order). Returns ``(cheap_step, anchor_step,
+    test_quality)`` callbacks for :class:`TwoTierEngine`: the cheap tier is
+    the 2D->3D transformation, the anchor tier ingests the frame's 3D
+    detections, and test quality is the F1 agreement between the cheap
+    tier's output and the (cloud) 3D result.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import metrics, transform
+    from repro.serving.common import ComponentTimes, onboard_transform_time
+
+    params = transform.resolve_backend_params(
+        tparams or transform.TransformParams(), backend)
+    comp = comp or ComponentTimes()
+    jit_t = jax.jit(transform.transform_step, static_argnames=("params",))
+    jit_a = jax.jit(transform.anchor_step, static_argnames=("params",))
+
+    def cheap_step(state, x):
+        points, det2d, val2d, label_img = x[0], x[1], x[2], x[3]
+        state, out = jit_t(state, jnp.asarray(points), jnp.asarray(det2d),
+                           jnp.asarray(val2d), jnp.asarray(label_img), calib,
+                           params=params)
+        # The engine's Fig. 15 component model, weighted by this frame's
+        # associated/new detections (test scheduling is TwoTierEngine's
+        # own job, so no FOS term).
+        n_assoc = int(jnp.sum((out.det_to_track >= 0) & out.valid))
+        n_new = max(int(jnp.sum(out.valid)) - n_assoc, 0)
+        cost = onboard_transform_time(comp, n_assoc, n_new,
+                                      params.use_tba, use_fos=False)
+        return state, out, cost
+
+    def anchor_step(state, x):
+        det3d, val3d = x[4], x[5]
+        state, out = jit_a(state, jnp.asarray(det3d), jnp.asarray(val3d),
+                           calib, params=params)
+        return state, out, anchor_cost_s
+
+    def test_quality(state, x, out):
+        det3d, val3d = x[4], x[5]
+        f1, _, _ = metrics.f1_score(out.boxes3d, out.valid,
+                                    jnp.asarray(det3d), jnp.asarray(val3d))
+        return float(f1)
+
+    return cheap_step, anchor_step, test_quality
+
+
 @dataclasses.dataclass
 class TwoTierConfig:
     n_t: int = 4            # test period (steps)

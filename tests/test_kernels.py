@@ -86,7 +86,9 @@ class TestPointProj:
                                        p=jnp.asarray(stream.p),
                                        height=cfg.img_h, width=cfg.img_w)
         pts = jnp.asarray(frame.points)
-        uv, _, vis = projection.project_points(pts, calib)
+        # Pin the oracle side to the ref backend — under MOBY_BACKEND=pallas
+        # the default resolution would compare the kernel against itself.
+        uv, _, vis = projection.project_points(pts, calib, backend="ref")
         want = projection.label_points(uv, vis, jnp.asarray(frame.label_img))
         _, _, vis2, flat = pp_ops.point_proj(pts, calib.tr, calib.p,
                                              cfg.img_h, cfg.img_w)
