@@ -1,17 +1,20 @@
-"""Shared benchmark plumbing: CSV emit + engine helpers."""
+"""Shared benchmark plumbing: CSV emit, timing, and the Scenario/Session
+helpers every benchmark builds its runs through (repro.api facade)."""
 from __future__ import annotations
 
-import sys
 import time
-from typing import Iterable
 
 import jax
 
-from repro.core import transform
+from repro import api
 from repro.data import scenes
-from repro.serving import engine as engine_lib
 
 ROWS = []
+
+# Harness-wide defaults, set by ``benchmarks.run``'s --scenario/--policy
+# flags so scenario sweeps need no code edits.
+DEFAULT_SCENARIO = "kitti-urban"
+DEFAULT_POLICY = None
 
 
 def emit(name: str, value, derived: str = ""):
@@ -31,16 +34,46 @@ def timed(fn, *args, warmup: int = 1, iters: int = 5):
     return (time.perf_counter() - t0) / iters, out
 
 
+def add_scenario_args(ap):
+    """Shared --scenario/--policy argparse flags, backed by the api
+    registries (used by benchmarks.run and examples/serve_edge_cloud)."""
+    ap.add_argument("--scenario", default=None,
+                    choices=api.list_scenarios(),
+                    help="named Scenario preset (default: %(default)s -> "
+                         "each caller's default)")
+    ap.add_argument("--policy", default=None,
+                    help="scheduler policy: one of "
+                         f"{api.list_policies()} or 'periodic(k)'")
+    return ap
+
+
+def set_defaults(scenario: str | None = None, policy: str | None = None):
+    """Install harness-wide scenario/policy defaults (validated against
+    the registries; raises KeyError listing valid names)."""
+    global DEFAULT_SCENARIO, DEFAULT_POLICY
+    if scenario is not None:
+        api.scenario(scenario)          # fail fast on unknown names
+        DEFAULT_SCENARIO = scenario
+    if policy is not None:
+        api.get_policy(policy)
+        DEFAULT_POLICY = policy
+
+
+def make_session(name: str | None = None, **overrides) -> api.Session:
+    """The benchmark entry point onto the facade (replaces the seed's
+    ``make_engine``, which silently dropped unknown scene kwargs): resolve
+    a preset — the --scenario default unless named explicitly — apply
+    overrides with unknown-key validation, return a live Session."""
+    if DEFAULT_POLICY is not None and overrides.get("use_fos", True):
+        # Ablation variants that disable the scheduler (use_fos=False)
+        # stay policy-free; the rest of the sweep honours --policy.
+        overrides.setdefault("policy", DEFAULT_POLICY)
+    return api.Session(api.scenario(name or DEFAULT_SCENARIO, **overrides))
+
+
 def small_scene(seed: int = 0, n_points: int = 8192, max_obj: int = 12
                 ) -> scenes.SceneConfig:
-    """KITTI-like point density (the paper's environment), reduced frame
-    point count for CPU benchmark speed."""
-    return scenes.SceneConfig(max_obj=max_obj, n_points=n_points,
-                              mean_objects=6, seed=seed,
-                              density_scale=15000.0)
-
-
-def make_engine(detector: str, trace: str, mode: str, seed: int = 0,
-                **kw) -> engine_lib.MobyEngine:
-    return engine_lib.MobyEngine(small_scene(seed), detector, trace=trace,
-                                 mode=mode, seed=seed, **kw)
+    """The kitti-urban preset's scene (kernel benchmarks consume the raw
+    SceneConfig rather than a Session)."""
+    return api.scenario("kitti-urban", seed=seed, n_points=n_points,
+                        max_obj=max_obj).scene

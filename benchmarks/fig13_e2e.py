@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import emit, make_engine
+from benchmarks.common import emit, make_session
 
 MODELS = ["pointpillar", "second", "pointrcnn", "pv_rcnn"]
 TRACES = ["fcc1", "belgium2"]
@@ -19,9 +19,10 @@ def run():
     reductions = []
     for model in MODELS:
         for trace in TRACES:
-            eo = make_engine(model, trace, "edge_only", seed=3).run(FRAMES)
-            co = make_engine(model, trace, "cloud_only", seed=3).run(FRAMES)
-            mb = make_engine(model, trace, "moby", seed=3).run(FRAMES)
+            def rep(mode):
+                return make_session(detector=model, trace=trace, mode=mode,
+                                    seed=3).run(FRAMES)
+            eo, co, mb = rep("edge_only"), rep("cloud_only"), rep("moby")
             emit(f"fig13/{model}/{trace}/edge_only_ms",
                  round(eo.mean_latency * 1e3, 1))
             emit(f"fig13/{model}/{trace}/cloud_only_ms",

@@ -6,7 +6,7 @@ Paper anchors: -64.0 % latency vs Complex-YOLO, -77.6 % vs Monodle with
 slow for the edge."""
 from __future__ import annotations
 
-from benchmarks.common import emit, make_engine
+from benchmarks.common import emit, make_session
 from repro.runtime import costmodel
 
 BASELINES = ["complex_yolo", "frustum_convnet", "monodle"]
@@ -15,8 +15,10 @@ FRAMES = 40
 
 def run():
     for base in BASELINES:
-        eo = make_engine(base, "belgium2", "edge_only", seed=7).run(FRAMES)
-        mb = make_engine(base, "belgium2", "moby_onboard", seed=7).run(FRAMES)
+        eo = make_session(detector=base, mode="edge_only",
+                          seed=7).run(FRAMES)
+        mb = make_session(detector=base, mode="moby_onboard",
+                          seed=7).run(FRAMES)
         emit(f"fig14/{base}/baseline_ms", round(eo.mean_latency * 1e3, 1))
         emit(f"fig14/{base}/moby_ms", round(mb.mean_latency * 1e3, 1))
         red = 1 - mb.mean_latency / eo.mean_latency

@@ -8,7 +8,7 @@ import dataclasses
 
 import numpy as np
 
-from benchmarks.common import emit, make_engine
+from benchmarks.common import emit, make_session
 from repro.core import ransac, transform
 
 FRAMES = 24
@@ -19,8 +19,7 @@ def run():
     for iters in (5, 10, 30, 60):
         tp = transform.TransformParams(
             ransac=ransac.RansacParams(num_iters=iters))
-        res = make_engine("pointpillar", "belgium2", "moby", seed=21,
-                          tparams=tp).run(FRAMES)
+        res = make_session(mode="moby", seed=21, tparams=tp).run(FRAMES)
         # RANSAC cost grows linearly with iterations on TX2 (30 it ~ 23 ms
         # inside bbox estimation).
         extra = (iters - 30) / 30 * 0.023
@@ -32,8 +31,7 @@ def run():
     # (c)/(d) association criterion vs accuracy / latency.
     for thresh in (0.1, 0.3, 0.5, 0.7):
         tp = transform.TransformParams(iou_assoc=thresh)
-        res = make_engine("pointpillar", "belgium2", "moby", seed=21,
-                          tparams=tp).run(FRAMES)
+        res = make_session(mode="moby", seed=21, tparams=tp).run(FRAMES)
         emit(f"fig16/assoc_{thresh}/accuracy", round(res.mean_f1, 3),
              "paper: diminishing gain past 0.3")
         emit(f"fig16/assoc_{thresh}/onboard_ms",

@@ -16,9 +16,8 @@ from __future__ import annotations
 
 import time
 
-from benchmarks.common import emit
-from repro.data import scenes
-from repro.fleet import FleetEngine
+from benchmarks.common import emit, make_session
+from repro import api
 from repro.serving import engine as engine_lib
 from repro.serving import tape as tape_lib
 
@@ -26,13 +25,10 @@ S_LIST = (1, 4, 16, 64)
 FRAMES = 24
 REPEATS = 3
 
-
-def _cfg() -> scenes.SceneConfig:
-    """Lean scene so per-frame device work is dispatch/overhead-bound —
-    the regime fleet batching targets (full-size scenes are exercised by
-    fig13/fig14)."""
-    return scenes.SceneConfig(max_obj=6, n_points=512, img_h=32, img_w=104,
-                              mean_objects=3, density_scale=2500.0, seed=5)
+# Lean scene so per-frame device work is dispatch/overhead-bound — the
+# regime fleet batching targets (full-size scenes are exercised by
+# fig13/fig14). Expressed as overrides on the smoke preset.
+LEAN = dict(n_points=512, img_h=32, img_w=104, density_scale=2500.0)
 
 
 def _best_wall(fn, repeats: int = REPEATS) -> float:
@@ -45,12 +41,12 @@ def _best_wall(fn, repeats: int = REPEATS) -> float:
 
 
 def run() -> None:
-    cfg = _cfg()
     per_sf_ms = {}
+    cfg = api.scenario("smoke", seed=3, **LEAN).scene
     for s in S_LIST:
-        eng = FleetEngine(cfg, "pointpillar", n_streams=s, seed=3)
-        res = eng.run_scan(FRAMES)          # records tapes + compiles
-        best = _best_wall(lambda: eng.run_scan(FRAMES))
+        sess = make_session("smoke", n_streams=s, seed=3, **LEAN)
+        res = sess.run(FRAMES, scan=True)   # records tapes + compiles
+        best = _best_wall(lambda: sess.run(FRAMES, scan=True))
         per_sf_ms[s] = 1e3 * best / (s * FRAMES)
         emit(f"fleet_scaling/S{s}/fleet_fps", round(s * FRAMES / best, 1))
         emit(f"fleet_scaling/S{s}/per_stream_frame_ms",

@@ -1,13 +1,20 @@
 """Benchmark harness entry point — one module per paper table/figure.
 
 Prints ``name,value,derived`` CSV rows (see benchmarks/common.emit).
-Usage: PYTHONPATH=src python -m benchmarks.run [module ...]
+Usage: PYTHONPATH=src python -m benchmarks.run [--scenario NAME]
+                                               [--policy NAME] [module ...]
+
+--scenario / --policy (backed by the repro.api registries) swap the
+Scenario preset / scheduler policy every engine-driven benchmark runs
+under, so sweeps like ``--scenario sparse-lidar --policy periodic(8)``
+need no code edits.
 """
 from __future__ import annotations
 
-import sys
+import argparse
 import time
 
+from benchmarks import common
 
 MODULES = [
     "fig2_edge_only",
@@ -27,7 +34,19 @@ MODULES = [
 
 def main() -> None:
     import importlib
-    wanted = sys.argv[1:] or MODULES
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("modules", nargs="*", metavar="module",
+                    help=f"benchmark modules to run (default: all of "
+                         f"{', '.join(MODULES)})")
+    common.add_scenario_args(ap)
+    args = ap.parse_args()
+    unknown = [m for m in args.modules if m not in MODULES]
+    if unknown:
+        ap.error(f"unknown module(s) {', '.join(unknown)}; available: "
+                 f"{', '.join(MODULES)}")
+    common.set_defaults(args.scenario, args.policy)
+
+    wanted = args.modules or MODULES
     print("name,value,derived")
     for name in wanted:
         mod = importlib.import_module(f"benchmarks.{name}")

@@ -4,7 +4,7 @@ Paper anchors: accuracy 0.762 -> 0.787 -> 0.814; on-board latency
 88.44 -> 89.45 -> 76.29 ms (TBA makes estimation cheaper via priors)."""
 from __future__ import annotations
 
-from benchmarks.common import emit, make_engine
+from benchmarks.common import emit, make_session
 
 FRAMES = 40
 _PAPER = {
@@ -21,8 +21,7 @@ def run():
         "trs_fos_tba": dict(use_fos=True, use_tba=True),
     }
     for name, kw in variants.items():
-        res = make_engine("pointpillar", "belgium2", "moby", seed=11,
-                          **kw).run(FRAMES)
+        res = make_session(mode="moby", seed=11, **kw).run(FRAMES)
         pf1, plat = _PAPER[name]
         emit(f"table4/{name}/accuracy", round(res.mean_f1, 3),
              f"paper={pf1}")

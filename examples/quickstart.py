@@ -1,49 +1,29 @@
-"""Quickstart: run the Moby 2D->3D transformation on one synthetic stream.
+"""Quickstart: the whole Moby stack behind one declarative surface.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Walks the paper's Fig. 4 workflow: anchor frame (cloud 3D detection) ->
-per-frame 2D->3D transformation with tracking-based association -> F1 vs
-the simulator's ground truth.
+Scenario -> Session -> RunReport: pick a named preset (see
+``api.list_scenarios()``), run it, read packed per-frame outcomes and the
+aggregates. The Session internally drives the paper's Fig. 4 workflow —
+frame-offloading scheduler, anchor frames via the cloud 3D detector over
+the 4G netsim, on-device 2D->3D transformation — and at n_streams > 1
+switches to the batched fleet engine transparently.
 """
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import metrics, projection, transform
-from repro.data import scenes
+from repro import api
 
 
 def main():
-    cfg = scenes.SceneConfig(max_obj=10, n_points=8192, mean_objects=5,
-                             density_scale=15000.0, seed=1)
-    stream = scenes.SceneStream(cfg, seed=1)
-    calib = projection.Calibration(
-        tr=jnp.asarray(stream.tr), p=jnp.asarray(stream.p),
-        height=cfg.img_h, width=cfg.img_w)
-    rng = np.random.default_rng(0)
-    state = transform.init_state(max_tracks=20, key=jax.random.key(0))
-    params = transform.TransformParams()
-    noise = scenes.DETECTOR_PROFILES["pointpillar"]
+    scn = api.scenario("kitti-urban", seed=1, max_obj=10, mean_objects=5)
+    report = api.Session(scn).run(12)
 
-    print("frame  kind       dets  F1")
-    for t, frame in enumerate(stream.frames(12)):
-        if t == 0:
-            det3d, val3d = scenes.oracle_detect_3d(frame, rng, noise)
-            state, out = transform.anchor_step(
-                state, jnp.asarray(det3d), jnp.asarray(val3d), calib, params)
-            kind = "anchor"
-        else:
-            boxes2d, val2d, label_img = scenes.oracle_detect_2d(frame, rng)
-            state, out = transform.transform_step(
-                state, jnp.asarray(frame.points), jnp.asarray(boxes2d),
-                jnp.asarray(val2d), jnp.asarray(label_img), calib, params)
-            kind = "2D->3D"
-        f1, _, _ = metrics.f1_score(out.boxes3d, out.valid,
-                                    jnp.asarray(frame.gt_boxes),
-                                    jnp.asarray(frame.visible_gt()))
-        print(f"{t:5d}  {kind:9s} {int(jnp.sum(out.valid)):4d}  "
-              f"{float(f1):.3f}")
+    print(f"scenario={report.scenario} policy={report.policy}")
+    print("frame  kind       latency_ms  F1")
+    for r in report.records:
+        print(f"{r.frame:5d}  {r.kind:9s} {r.latency_s * 1e3:9.1f}  "
+              f"{r.f1:.3f}")
+    print(f"\nmean latency {report.mean_latency * 1e3:.1f} ms   "
+          f"mean F1 {report.mean_f1:.3f}   "
+          f"anchor rate {report.anchor_rate:.2f}")
 
 
 if __name__ == "__main__":

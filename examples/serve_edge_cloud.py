@@ -1,35 +1,54 @@
 """End-to-end serving driver: Moby vs edge-only vs cloud-only on a stream.
 
     PYTHONPATH=src python examples/serve_edge_cloud.py [--frames 40]
-                                                        [--trace belgium2]
-                                                        [--detector pointpillar]
+        [--scenario kitti-urban] [--policy "periodic(8)"]
+        [--trace belgium2] [--detector pointpillar]
 
-Runs the full system (scheduler, netsim, recomputation) and prints the
-paper's headline comparison (Fig. 13).
+Runs the full system through the repro.api facade (scheduler, netsim,
+recomputation) and prints the paper's headline comparison (Fig. 13).
+--scenario / --policy come from the api registries (shared argparse
+helper in benchmarks/common.py), so scenario sweeps need no code edits;
+a fleet preset (n_streams > 1) runs its baselines on a single stream.
 """
 import argparse
+import os
+import sys
 
-from repro.data import scenes
-from repro.serving import engine as engine_lib
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import add_scenario_args  # noqa: E402
+from repro import api  # noqa: E402
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--frames", type=int, default=40)
-    ap.add_argument("--trace", default="belgium2",
-                    choices=["fcc1", "fcc2", "belgium1", "belgium2"])
-    ap.add_argument("--detector", default="pointpillar")
+    ap.add_argument("--trace", default=None,
+                    choices=["fcc1", "fcc2", "belgium1", "belgium2"],
+                    help="override the scenario's network trace")
+    ap.add_argument("--detector", default=None,
+                    help="override the scenario's 3D detector profile")
+    add_scenario_args(ap)
     args = ap.parse_args()
 
-    cfg = scenes.SceneConfig(max_obj=12, n_points=8192, mean_objects=6,
-                             density_scale=15000.0, seed=3)
+    name = args.scenario or "kitti-urban"
+    overrides = {"seed": 3}
+    if args.trace:
+        overrides["trace"] = args.trace
+    if args.detector:
+        overrides["detector"] = args.detector
+    if args.policy:
+        overrides["policy"] = args.policy
+
     rows = []
     for mode in ("edge_only", "cloud_only", "moby"):
-        eng = engine_lib.MobyEngine(cfg, args.detector, trace=args.trace,
-                                    mode=mode, seed=3)
-        res = eng.run(args.frames)
+        # Session runs baselines single-stream; Moby honours the preset's
+        # fleet size.
+        sess = api.Session(api.scenario(name, mode=mode, **overrides))
+        res = sess.run(args.frames)
         rows.append((mode, res.mean_latency * 1e3, res.mean_f1))
-        print(f"{mode:11s}: latency {res.mean_latency * 1e3:7.1f} ms   "
+        tag = f" (S={sess.n_streams})" if sess.n_streams > 1 else ""
+        print(f"{mode:11s}{tag}: latency {res.mean_latency * 1e3:7.1f} ms   "
               f"F1 {res.mean_f1:.3f}")
     best_base = min(rows[0][1], rows[1][1])
     red = 1 - rows[2][1] / best_base

@@ -1,0 +1,34 @@
+"""repro.api — the declarative facade over the whole Moby stack.
+
+One stable surface for every scale, speed and scenario-diversity change::
+
+    from repro import api
+
+    report = api.Session(api.scenario("kitti-urban", seed=3)).run(40)
+    print(report.mean_latency, report.mean_f1)
+
+    # Fleet of 16 on a congested cell, periodic re-anchoring every 8 frames:
+    scn = api.scenario("fleet-16-congested", policy="periodic(8)")
+    api.Session(scn).run(32).to_csv("fleet.csv")
+
+* :func:`scenario` / :func:`list_scenarios` / :func:`register_scenario` —
+  named presets of :class:`Scenario`, the frozen run spec;
+* :class:`Session` — picks MobyEngine (S=1) or FleetEngine (S>1) and runs;
+* :class:`RunReport` — the canonical packed outcome (re-exported from
+  ``repro.serving``);
+* scheduler policies (``fos``, ``periodic(k)``, ``always_anchor``,
+  ``never_anchor``) are resolved through ``repro.core.scheduler``'s policy
+  registry — re-exported here so callers can enumerate/extend the slot.
+"""
+from repro.api.scenario import (Scenario, list_scenarios, register_scenario,
+                                scenario)
+from repro.api.session import Session
+from repro.core.scheduler import (SchedulerPolicy, get_policy, list_policies,
+                                  register_policy)
+from repro.serving.common import FrameRecord, RunReport
+
+__all__ = [
+    "FrameRecord", "RunReport", "Scenario", "SchedulerPolicy", "Session",
+    "get_policy", "list_policies", "list_scenarios", "register_policy",
+    "register_scenario", "scenario",
+]

@@ -1,0 +1,82 @@
+"""Session: run a :class:`Scenario` end to end and get a RunReport.
+
+The one entry point the ROADMAP's scale/speed/scenario PRs plug into:
+``Session(scenario).run(n_frames)`` internally picks the single-stream
+``MobyEngine`` (S=1) or the batched ``FleetEngine`` (S>1), threads the
+scheduler-policy and ops-backend strings through the jit-static params,
+and returns the canonical :class:`repro.serving.common.RunReport` with
+scenario/policy provenance stamped on it.
+"""
+from __future__ import annotations
+
+from typing import Union
+
+from repro.api.scenario import Scenario, scenario as _scenario
+from repro.fleet.engine import FleetEngine
+from repro.serving.common import ComponentTimes, RunReport
+from repro.serving.engine import MobyEngine
+
+
+class Session:
+    """A live serving run for one scenario.
+
+    The engine is built eagerly (compilation caches, netsim, scene stream)
+    so repeated :meth:`run` calls reuse it — the same contract the engines
+    had, now behind one constructor::
+
+        report = Session(api.scenario("fleet-16-congested")).run(32)
+        report.mean_latency, report.anchor_rate, report.to_csv("out.csv")
+    """
+
+    def __init__(self, scn: Union[Scenario, str]):
+        if isinstance(scn, str):
+            scn = _scenario(scn)
+        self.scenario = scn
+        sparams = scn.scheduler_params()
+        comp = scn.comp or ComponentTimes()
+        if scn.n_streams < 1:
+            raise ValueError(f"n_streams must be >= 1, got {scn.n_streams}")
+        self._scan_engine = None
+        # Baselines (edge_only/cloud_only) are single-stream notions — a
+        # fleet preset's baseline comparison runs on one stream rather
+        # than rejecting the mode (FleetEngine serves moby modes only).
+        if scn.n_streams == 1 or scn.mode in ("edge_only", "cloud_only"):
+            self.engine = MobyEngine(
+                scn.scene, scn.detector, trace=scn.trace, mode=scn.mode,
+                use_fos=scn.use_fos, use_tba=scn.use_tba,
+                tparams=scn.tparams, sparams=sparams, seed=scn.seed,
+                comp=comp, backend=scn.backend)
+        else:
+            self.engine = self._scan_engine = self._fleet(scn.n_streams)
+
+    def _fleet(self, n_streams: int) -> FleetEngine:
+        scn = self.scenario
+        return FleetEngine(
+            scn.scene, scn.detector, n_streams=n_streams, trace=scn.trace,
+            mode=scn.mode, use_fos=scn.use_fos, use_tba=scn.use_tba,
+            tparams=scn.tparams, sparams=scn.scheduler_params(),
+            seed=scn.seed, comp=scn.comp or ComponentTimes(),
+            cloud_cfg=scn.cloud, backend=scn.backend)
+
+    @property
+    def n_streams(self) -> int:
+        """Streams the built engine actually serves (1 for baselines)."""
+        return getattr(self.engine, "n_streams", 1)
+
+    def run(self, n_frames: int, scan: bool = False) -> RunReport:
+        """Serve ``n_frames`` per stream.
+
+        ``scan=True`` uses the fleet's single-dispatch ``lax.scan`` mode
+        (benchmark timing). At S=1 an equivalent single-stream fleet slice
+        is built lazily for it (S=1 fleet parity is a tested invariant).
+        """
+        if scan:
+            if self._scan_engine is None:
+                self._scan_engine = self._fleet(1)
+            report = self._scan_engine.run_scan(n_frames)
+        else:
+            report = self.engine.run(n_frames)
+        report.scenario = self.scenario.name
+        report.policy = self.scenario.scheduler_params().policy \
+            if self.scenario.use_fos else ""
+        return report

@@ -1,21 +1,39 @@
-"""Frame offloading scheduler (§3.4).
+"""Frame offloading scheduler (§3.4) with pluggable policies.
 
-Every ``N_T`` frames a *test frame* is offloaded to the cloud detector in
-parallel with on-device processing. When the cloud result returns, the
-transformation output buffered for that frame is scored against it (3D-IoU
-F1, the cloud result acting as ground truth). If the score drops below
-``Q_T``, the next frame becomes an *anchor frame*: processing blocks on the
-cloud 3D result, which then reseeds the transformation (and `recomputation`
-in the serving engine replays buffered intermediate outputs to hide the
-wait).
+The paper's FOS policy: every ``N_T`` frames a *test frame* is offloaded to
+the cloud detector in parallel with on-device processing. When the cloud
+result returns, the transformation output buffered for that frame is scored
+against it (3D-IoU F1, the cloud result acting as ground truth). If the
+score drops below ``Q_T``, the next frame becomes an *anchor frame*:
+processing blocks on the cloud 3D result, which then reseeds the
+transformation (and `recomputation` in the serving engine replays buffered
+intermediate outputs to hide the wait).
+
+Frame treatment is now a *policy slot*: :func:`scheduler_pre` /
+:func:`scheduler_post` dispatch through a registry keyed by
+``SchedulerParams.policy`` — a plain string, so it stays hashable and
+jit-static (dispatch happens at trace time, exactly like the ops-backend
+string in ``TransformParams``). Registered policies:
+
+* ``fos``            — the paper's test-frame feedback loop (default);
+* ``periodic(k)``    — anchor every k frames, no test traffic;
+* ``always_anchor``  — every frame offloaded as an anchor (cloud-bound
+  upper bound on accuracy, worst-case latency);
+* ``never_anchor``   — anchor frame 0 only, then pure on-device
+  transformation (drift lower bound).
+
+This is the slot a Panopticus-style adaptive policy plugs into (see
+ROADMAP.md): register a new policy, name it in a Scenario, done.
 
 The state machine itself is jit-compatible; the asynchronous transport
 (when test results arrive) is driven by the engine/netsim, which feeds
-``test_arrived`` + payloads into :func:`scheduler_step`.
+``test_arrived`` + payloads into :func:`scheduler_post`.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+import functools
+import re
+from typing import Callable, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +45,9 @@ class SchedulerParams(NamedTuple):
     n_t: int = 4          # test-frame period (paper §4)
     q_t: float = 0.7      # accuracy threshold (paper §4)
     iou_thresh: float = 0.4
+    # Policy slot: a registered policy name ("fos", "periodic(8)", ...).
+    # A plain string keeps the NamedTuple hashable for static jit args.
+    policy: str = "fos"
 
 
 class SchedulerState(NamedTuple):
@@ -43,6 +64,19 @@ class SchedulerState(NamedTuple):
 class SchedulerActions(NamedTuple):
     send_test: jnp.ndarray       # bool: offload this frame as a test frame
     run_as_anchor: jnp.ndarray   # bool: this frame is an anchor frame
+
+
+class SchedulerPolicy(NamedTuple):
+    """A frame-treatment policy: ``pre`` decides this frame's actions from
+    the state, ``post`` advances the state machine after the frame. Both
+    must be pure jnp (vmapped across fleet streams, wrapped in lax.scan).
+    ``uses_tests`` declares whether the policy offloads test frames — the
+    engines charge the per-frame FOS scoring cost (ComponentTimes.fos)
+    only when it does."""
+    name: str
+    pre: Callable[[SchedulerState, SchedulerParams], SchedulerActions]
+    post: Callable[..., SchedulerState]
+    uses_tests: bool = True
 
 
 def init_scheduler(max_obj: int) -> SchedulerState:
@@ -66,20 +100,61 @@ def init_scheduler_fleet(n_streams: int, max_obj: int) -> SchedulerState:
     return jax.vmap(lambda _: init_scheduler(max_obj))(jnp.arange(n_streams))
 
 
+# ---------------------------------------------------------------------------
+# Policy registry
+# ---------------------------------------------------------------------------
+
+# base name -> factory(arg: Optional[int]) -> SchedulerPolicy
+_POLICIES: Dict[str, Callable[[Optional[int]], SchedulerPolicy]] = {}
+
+_PARAM_RE = re.compile(r"^([a-z_]+)\((\d+)\)$")
+
+
+def register_policy(name: str,
+                    factory: Callable[[Optional[int]], SchedulerPolicy]
+                    ) -> None:
+    """Register a policy under a base name. ``factory`` receives the
+    optional integer argument of a parameterized spelling (``"name(k)"``),
+    or None for the bare name. Re-registration takes effect immediately
+    (the resolution cache is dropped)."""
+    _POLICIES[name] = factory
+    get_policy.cache_clear()
+
+
+def list_policies() -> list[str]:
+    return sorted(_POLICIES)
+
+
+@functools.lru_cache(maxsize=None)
+def get_policy(name: str) -> SchedulerPolicy:
+    """Resolve a policy name — ``"fos"``, ``"periodic(8)"``, ... — to its
+    registered :class:`SchedulerPolicy`. Raises KeyError naming the
+    registered policies on an unknown name."""
+    base, arg = name, None
+    m = _PARAM_RE.match(name)
+    if m:
+        base, arg = m.group(1), int(m.group(2))
+    if base not in _POLICIES:
+        raise KeyError(
+            f"unknown scheduler policy {name!r}; registered policies: "
+            f"{list_policies()} (parameterized form: 'periodic(k)')")
+    return _POLICIES[base](arg)
+
+
 def scheduler_pre(state: SchedulerState,
-                  params: SchedulerParams = SchedulerParams()) -> SchedulerActions:
-    """Decide this frame's treatment before processing it."""
-    run_as_anchor = state.anchor_pending
-    due = state.frames_since_test >= params.n_t - 1
-    send_test = (~run_as_anchor) & due & (~state.test_inflight)
-    return SchedulerActions(send_test=send_test, run_as_anchor=run_as_anchor)
+                  params: SchedulerParams = SchedulerParams()
+                  ) -> SchedulerActions:
+    """Decide this frame's treatment before processing it (dispatches
+    through the policy named by ``params.policy`` at trace time)."""
+    return get_policy(params.policy).pre(state, params)
 
 
 def scheduler_post(state: SchedulerState, actions: SchedulerActions,
                    out_boxes: jnp.ndarray, out_valid: jnp.ndarray,
                    test_arrived: jnp.ndarray, test_boxes: jnp.ndarray,
                    test_valid: jnp.ndarray,
-                   params: SchedulerParams = SchedulerParams()) -> SchedulerState:
+                   params: SchedulerParams = SchedulerParams()
+                   ) -> SchedulerState:
     """Advance the state machine after processing a frame.
 
     Args:
@@ -89,6 +164,29 @@ def scheduler_post(state: SchedulerState, actions: SchedulerActions,
         arrived during this frame.
       test_boxes/test_valid: the cloud 3D detections for that test frame.
     """
+    return get_policy(params.policy).post(
+        state, actions, out_boxes, out_valid, test_arrived, test_boxes,
+        test_valid, params)
+
+
+# ---------------------------------------------------------------------------
+# Built-in policies
+# ---------------------------------------------------------------------------
+
+
+def _fos_pre(state: SchedulerState,
+             params: SchedulerParams) -> SchedulerActions:
+    run_as_anchor = state.anchor_pending
+    due = state.frames_since_test >= params.n_t - 1
+    send_test = (~run_as_anchor) & due & (~state.test_inflight)
+    return SchedulerActions(send_test=send_test, run_as_anchor=run_as_anchor)
+
+
+def _fos_post(state: SchedulerState, actions: SchedulerActions,
+              out_boxes: jnp.ndarray, out_valid: jnp.ndarray,
+              test_arrived: jnp.ndarray, test_boxes: jnp.ndarray,
+              test_valid: jnp.ndarray,
+              params: SchedulerParams) -> SchedulerState:
     # Buffer our own output when this frame is offloaded as a test.
     buf_boxes = jnp.where(actions.send_test, out_boxes, state.buf_boxes)
     buf_valid = jnp.where(actions.send_test, out_valid, state.buf_valid)
@@ -115,3 +213,72 @@ def scheduler_post(state: SchedulerState, actions: SchedulerActions,
         tests_sent=state.tests_sent + actions.send_test.astype(jnp.int32),
         anchors_triggered=state.anchors_triggered + bad.astype(jnp.int32),
     )
+
+
+def _anchor_only_post(state: SchedulerState, actions: SchedulerActions,
+                      out_boxes, out_valid, test_arrived, test_boxes,
+                      test_valid, params: SchedulerParams) -> SchedulerState:
+    """Shared post for the test-free policies: clear the pending flag,
+    count frames/anchors, leave the test machinery untouched."""
+    anchored = actions.run_as_anchor
+    return state._replace(
+        frames_since_test=jnp.where(anchored, 0,
+                                    state.frames_since_test + 1),
+        anchor_pending=jnp.where(anchored, False, state.anchor_pending),
+        anchors_triggered=state.anchors_triggered
+        + anchored.astype(jnp.int32),
+    )
+
+
+def _no_test(state: SchedulerState) -> jnp.ndarray:
+    # A False tied to the state's dtype/shape (vmap/scan friendly).
+    return jnp.zeros_like(state.anchor_pending)
+
+
+def _make_fos(arg: Optional[int]) -> SchedulerPolicy:
+    if arg is not None:
+        raise KeyError("policy 'fos' takes no argument; tune "
+                       "SchedulerParams.n_t / q_t instead")
+    return SchedulerPolicy("fos", _fos_pre, _fos_post)
+
+
+def _make_periodic(arg: Optional[int]) -> SchedulerPolicy:
+    k = 4 if arg is None else arg
+    if k < 1:
+        raise KeyError(f"periodic({k}): period must be >= 1")
+
+    def pre(state: SchedulerState,
+            params: SchedulerParams) -> SchedulerActions:
+        due = state.frames_since_test >= k - 1
+        return SchedulerActions(send_test=_no_test(state),
+                                run_as_anchor=state.anchor_pending | due)
+
+    return SchedulerPolicy(f"periodic({k})", pre, _anchor_only_post,
+                           uses_tests=False)
+
+
+def _make_always_anchor(arg: Optional[int]) -> SchedulerPolicy:
+    def pre(state: SchedulerState,
+            params: SchedulerParams) -> SchedulerActions:
+        return SchedulerActions(
+            send_test=_no_test(state),
+            run_as_anchor=jnp.ones_like(state.anchor_pending))
+
+    return SchedulerPolicy("always_anchor", pre, _anchor_only_post,
+                           uses_tests=False)
+
+
+def _make_never_anchor(arg: Optional[int]) -> SchedulerPolicy:
+    def pre(state: SchedulerState,
+            params: SchedulerParams) -> SchedulerActions:
+        return SchedulerActions(send_test=_no_test(state),
+                                run_as_anchor=state.anchor_pending)
+
+    return SchedulerPolicy("never_anchor", pre, _anchor_only_post,
+                           uses_tests=False)
+
+
+register_policy("fos", _make_fos)
+register_policy("periodic", _make_periodic)
+register_policy("always_anchor", _make_always_anchor)
+register_policy("never_anchor", _make_never_anchor)

@@ -24,8 +24,7 @@ the single-stream ``MobyEngine`` — enforced by tests/test_fleet.py.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import List, Optional, Sequence
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -36,73 +35,33 @@ from repro.data import scenes
 from repro.fleet import cloud as cloud_lib
 from repro.fleet import step as step_lib
 from repro.runtime import costmodel, netsim
-from repro.serving import engine as engine_lib
 from repro.serving import tape as tape_lib
 from repro.serving.common import (PC_BYTES, RESULT_BYTES, ComponentTimes,
-                                  onboard_transform_time)
+                                  RunReport, onboard_transform_time)
 
 
-@dataclasses.dataclass
-class FleetRunResult:
-    """Per-stream-per-frame outcomes, shape (S, F) throughout."""
-    is_anchor: np.ndarray
-    send_test: np.ndarray
-    latency_s: np.ndarray
-    onboard_s: np.ndarray
-    f1: np.ndarray
-    precision: np.ndarray
-    recall: np.ndarray
+# Deprecation shim (one PR): the fleet's packed per-stream-per-frame
+# outcome and its aggregates now live on the canonical
+# serving.common.RunReport (same shapes, same properties, plus is_anchor /
+# send_test derived from the kind strings). Build via report_from_packed.
+FleetRunResult = RunReport
 
-    @classmethod
-    def from_packed(cls, packed_sf: np.ndarray) -> "FleetRunResult":
-        """Build from a (S, F, COL_ONBOARD+1) packed stats array."""
-        p = packed_sf
-        return cls(is_anchor=p[:, :, step_lib.COL_IS_ANCHOR] > 0.5,
-                   send_test=p[:, :, step_lib.COL_SEND_TEST] > 0.5,
-                   latency_s=p[:, :, step_lib.COL_LATENCY],
-                   onboard_s=p[:, :, step_lib.COL_ONBOARD],
-                   f1=p[:, :, step_lib.COL_F1],
-                   precision=p[:, :, step_lib.COL_PRECISION],
-                   recall=p[:, :, step_lib.COL_RECALL])
 
-    @property
-    def n_streams(self) -> int:
-        return self.f1.shape[0]
-
-    @property
-    def mean_latency(self) -> float:
-        return float(np.mean(self.latency_s))
-
-    @property
-    def mean_onboard(self) -> float:
-        return float(np.mean(self.onboard_s))
-
-    @property
-    def mean_f1(self) -> float:
-        return float(np.mean(self.f1))
-
-    @property
-    def mean_anchor_latency(self) -> float:
-        a = self.latency_s[self.is_anchor]
-        return float(np.mean(a)) if a.size else 0.0
-
-    @property
-    def anchor_rate(self) -> float:
-        return float(np.mean(self.is_anchor))
-
-    def kinds(self, s: int) -> List[str]:
-        return ["anchor" if self.is_anchor[s, t] else
-                ("test" if self.send_test[s, t] else "transform")
-                for t in range(self.f1.shape[1])]
-
-    def stream_records(self, s: int) -> List[engine_lib.FrameRecord]:
-        """One stream's run as MobyEngine-style FrameRecords."""
-        ks = self.kinds(s)
-        return [engine_lib.FrameRecord(
-                    t, ks[t], float(self.latency_s[s, t]),
-                    float(self.onboard_s[s, t]), float(self.f1[s, t]),
-                    float(self.precision[s, t]), float(self.recall[s, t]))
-                for t in range(self.f1.shape[1])]
+def report_from_packed(packed_sf: np.ndarray) -> RunReport:
+    """Build a RunReport from a (S, F, COL_ONBOARD+1) packed stats array
+    (the scheduler's anchor/test bits are mutually exclusive, so the kind
+    string per frame is lossless)."""
+    p = packed_sf
+    is_anchor = p[:, :, step_lib.COL_IS_ANCHOR] > 0.5
+    send_test = p[:, :, step_lib.COL_SEND_TEST] > 0.5
+    kind = np.where(is_anchor, "anchor",
+                    np.where(send_test, "test", "transform")).astype("<U12")
+    return RunReport(kind=kind,
+                     latency_s=p[:, :, step_lib.COL_LATENCY],
+                     onboard_s=p[:, :, step_lib.COL_ONBOARD],
+                     f1=p[:, :, step_lib.COL_F1],
+                     precision=p[:, :, step_lib.COL_PRECISION],
+                     recall=p[:, :, step_lib.COL_RECALL])
 
 
 class FleetEngine:
@@ -134,6 +93,10 @@ class FleetEngine:
         self.tparams = transform.resolve_backend_params(
             base._replace(use_tba=use_tba), backend)
         self.sparams = sparams or scheduler.SchedulerParams()
+        # FOS scoring cost applies only to test-offloading policies (see
+        # serving.engine).
+        self._charge_fos = use_fos and \
+            scheduler.get_policy(self.sparams.policy).uses_tests
         tr, p = scenes.make_calibration(scene_cfg)
         self.calib = projection.Calibration(
             tr=jnp.asarray(tr), p=jnp.asarray(p),
@@ -183,7 +146,7 @@ class FleetEngine:
             gt_visible=jnp.asarray(f.gt_visible))
 
     # ------------------------------------------------------------------
-    def run(self, n_frames: int) -> FleetRunResult:
+    def run(self, n_frames: int) -> RunReport:
         """Orchestrated serving: one device dispatch + one stats fetch per
         frame for all S streams; byte-accurate shared-uplink/cloud timing."""
         stack = self._stacked(n_frames)
@@ -231,7 +194,8 @@ class FleetEngine:
                     n_assoc = int(pk[s, step_lib.COL_N_ASSOC])
                     n_new = max(int(pk[s, step_lib.COL_N_VALID]) - n_assoc, 0)
                     onb[s] = onboard_transform_time(
-                        self.comp, n_assoc, n_new, self.use_tba, self.use_fos)
+                        self.comp, n_assoc, n_new, self.use_tba,
+                        self._charge_fos)
                     lat[s] = onb[s]
                 if send_test[s]:
                     inflight_at[s] = walls[s] + roundtrip[s]
@@ -242,17 +206,17 @@ class FleetEngine:
             walls += np.where(is_anchor, np.maximum(self.frame_dt, lat),
                               self.frame_dt)
             self.uplink.advance(self.frame_dt)
-        return FleetRunResult.from_packed(out)
+        return report_from_packed(out)
 
     # ------------------------------------------------------------------
-    def run_scan(self, n_frames: int) -> FleetRunResult:
+    def run_scan(self, n_frames: int) -> RunReport:
         """Benchmark mode: the whole fleet run is ONE ``lax.scan`` dispatch,
         with the network/cloud model evaluated on device."""
         state, outs = self._scan_fn()(
             step_lib.init_fleet_state(self.n_streams, self.cfg.max_obj),
             self._scan_inputs(n_frames), n_frames)
         packed = np.asarray(outs).transpose(1, 0, 2)   # (F,S,C) -> (S,F,C)
-        return FleetRunResult.from_packed(packed)
+        return report_from_packed(packed)
 
     def _scan_inputs(self, n_frames: int) -> step_lib.FrameInputs:
         stack = self._stacked(n_frames)
@@ -284,5 +248,6 @@ class FleetEngine:
             self.n_streams, self.calib, self.tparams, self.sparams,
             self.comp, net, self.use_fos,
             onboard_anchors=self.mode == "moby_onboard",
-            edge_infer_s=self._edge_infer())
+            edge_infer_s=self._edge_infer(),
+            charge_fos=self._charge_fos)
         return self._scan_cache

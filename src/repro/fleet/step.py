@@ -156,14 +156,20 @@ class ScanNetParams(NamedTuple):
 def make_fleet_scan(n_streams: int, calib, params, sparams,
                     comp: ComponentTimes, net: ScanNetParams,
                     use_fos: bool = True, onboard_anchors: bool = False,
-                    edge_infer_s: float = 0.0):
+                    edge_infer_s: float = 0.0,
+                    charge_fos: bool = None):
     """Jitted (state, FrameInputs stacked (F, S, ...), n_frames) ->
     (state, (F, S, N_COLS + 2)) — a whole fleet run in one dispatch.
 
     ``onboard_anchors`` mirrors the engine's ``moby_onboard`` mode: anchor
     frames run the 3D detector on the edge (``edge_infer_s``) and do not
     contend for the uplink/cloud; test frames still go to the cloud.
+    ``charge_fos`` controls the per-frame FOS scoring cost in the on-board
+    time model (defaults to ``use_fos``; engines pass False for policies
+    that never offload test frames).
     """
+    if charge_fos is None:
+        charge_fos = use_fos
     step = functools.partial(_stream_step, calib=calib, params=params,
                              sparams=sparams, use_fos=use_fos)
     vstep = jax.vmap(step, in_axes=(0, 0, 0, None))
@@ -203,7 +209,7 @@ def make_fleet_scan(n_streams: int, calib, params, sparams,
         n_assoc = packed[:, COL_N_ASSOC]
         n_new = jnp.maximum(packed[:, COL_N_VALID] - n_assoc, 0.0)
         onboard = onboard_time_vec(comp, n_assoc, n_new,
-                                   params.use_tba, use_fos)
+                                   params.use_tba, charge_fos)
         anchor_latency = edge_infer_s if onboard_anchors else roundtrip
         latency = jnp.where(is_anchor, anchor_latency, onboard)
         onboard = jnp.where(is_anchor, 0.0, onboard)

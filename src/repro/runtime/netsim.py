@@ -10,6 +10,7 @@ handshake models TCP setup.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Dict
 
 import numpy as np
@@ -39,7 +40,10 @@ def synthesize_trace(name: str, seconds: float = 600.0, dt: float = 0.1,
                      seed: int = 0) -> np.ndarray:
     """AR(1) series (Mbps per dt tick) matching the trace statistics."""
     st = TRACE_STATS[name]
-    rng = np.random.default_rng(hash(name) % (2 ** 31) + seed)
+    # Stable per-trace stream: crc32, not hash() — Python string hashing is
+    # randomized per process, which made trace realizations (and every
+    # engine run) differ run to run for the same seed.
+    rng = np.random.default_rng(zlib.crc32(name.encode()) % (2 ** 31) + seed)
     n = int(seconds / dt)
     rho = 0.98  # cellular bandwidth coherence at 100 ms
     x = np.empty(n)

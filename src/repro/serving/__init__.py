@@ -1,2 +1,8 @@
-"""Serving tier: Moby edge-cloud engine, shared frame tapes/constants
-(consumed by the fleet subsystem too) + generic two-tier LM serving."""
+"""Serving tier: Moby edge-cloud engine, the canonical RunReport, shared
+frame tapes/constants (consumed by the fleet subsystem too) + generic
+two-tier LM serving."""
+from repro.serving.common import (ComponentTimes, FrameRecord, RunReport,
+                                  onboard_transform_time)
+
+__all__ = ["ComponentTimes", "FrameRecord", "RunReport",
+           "onboard_transform_time"]

@@ -1,9 +1,15 @@
-"""Shared serving-layer pieces: wire sizes, calibrated component times and
-the on-board latency model, used by both the single-stream ``MobyEngine``
-and the batched multi-stream ``FleetEngine`` (repro.fleet)."""
+"""Shared serving-layer pieces: wire sizes, calibrated component times, the
+on-board latency model, and the canonical :class:`RunReport` — used by the
+single-stream ``MobyEngine``, the batched multi-stream ``FleetEngine``
+(repro.fleet) and the ``repro.api`` facade."""
 from __future__ import annotations
 
+import csv
 import dataclasses
+import io
+from typing import Dict, Iterable, List, Sequence, Union
+
+import numpy as np
 
 # Wire size of one LiDAR frame: the paper measures 6.96 Mbit/file average
 # (KITTI scans cropped to the camera FOV).
@@ -11,7 +17,7 @@ PC_BYTES = int(6.96e6 / 8)
 RESULT_BYTES = 64 * 7 * 4  # detections back to the edge
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class ComponentTimes:
     """Calibrated on-board component times (TX2), seconds. Derived from
     Fig. 15 / Table 4 as documented in benchmarks/fig15_breakdown.py."""
@@ -40,3 +46,161 @@ def onboard_transform_time(comp: ComponentTimes, n_assoc: float, n_new: float,
     if use_fos:
         t += comp.fos
     return t
+
+
+# ---------------------------------------------------------------------------
+# Canonical run outcome
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class FrameRecord:
+    """One stream-frame outcome (the seed engine's record format, kept as
+    the row view of :class:`RunReport`)."""
+    frame: int
+    kind: str                  # anchor | test | transform | edge/cloud_only
+    latency_s: float
+    onboard_s: float
+    f1: float
+    precision: float
+    recall: float
+
+
+_CSV_FIELDS = ("stream", "frame", "kind", "latency_s", "onboard_s", "f1",
+               "precision", "recall")
+
+
+@dataclasses.dataclass
+class RunReport:
+    """Canonical outcome of a serving run: per-stream-per-frame packed
+    arrays, shape (S, F) throughout (S=1 for the single-stream engine).
+
+    Unifies the seed's ``RunResult`` (list of FrameRecords) and the fleet
+    subsystem's ``FleetRunResult`` (packed arrays): one class carries the
+    aggregate properties every benchmark reads, the per-stream record view
+    the tests read, and CSV/dict export for the benchmark harness.
+    """
+    kind: np.ndarray        # (S, F) unicode: frame treatment per frame
+    latency_s: np.ndarray   # (S, F) end-to-end latency
+    onboard_s: np.ndarray   # (S, F) on-device transformation time
+    f1: np.ndarray          # (S, F)
+    precision: np.ndarray   # (S, F)
+    recall: np.ndarray      # (S, F)
+    scenario: str = ""      # provenance (repro.api fills these in)
+    policy: str = ""
+
+    # -- construction ---------------------------------------------------
+    @classmethod
+    def from_records(cls, records: Sequence[FrameRecord], *,
+                     scenario: str = "", policy: str = "") -> "RunReport":
+        """Build a single-stream (1, F) report from FrameRecords."""
+        def col(name, dtype=np.float32):
+            return np.asarray([getattr(r, name) for r in records],
+                              dtype=dtype)[None, :]
+        return cls(kind=col("kind", dtype="<U12"),
+                   latency_s=col("latency_s"), onboard_s=col("onboard_s"),
+                   f1=col("f1"), precision=col("precision"),
+                   recall=col("recall"), scenario=scenario, policy=policy)
+
+    # -- shape ----------------------------------------------------------
+    @property
+    def n_streams(self) -> int:
+        return self.f1.shape[0]
+
+    @property
+    def n_frames(self) -> int:
+        return self.f1.shape[1]
+
+    # -- derived masks --------------------------------------------------
+    @property
+    def is_anchor(self) -> np.ndarray:
+        return self.kind == "anchor"
+
+    @property
+    def send_test(self) -> np.ndarray:
+        return self.kind == "test"
+
+    # -- aggregates (the properties every benchmark/test reads) ---------
+    @property
+    def mean_latency(self) -> float:
+        return float(np.mean(self.latency_s))
+
+    @property
+    def mean_onboard(self) -> float:
+        return float(np.mean(self.onboard_s))
+
+    @property
+    def mean_f1(self) -> float:
+        return float(np.mean(self.f1))
+
+    @property
+    def mean_anchor_latency(self) -> float:
+        a = self.latency_s[self.is_anchor]
+        return float(np.mean(a)) if a.size else 0.0
+
+    @property
+    def anchor_rate(self) -> float:
+        return float(np.mean(self.is_anchor))
+
+    # -- per-stream record views ----------------------------------------
+    def kinds(self, s: int = 0) -> List[str]:
+        return [str(k) for k in self.kind[s]]
+
+    def stream_records(self, s: int) -> List[FrameRecord]:
+        """One stream's run as seed-engine-style FrameRecords."""
+        return [FrameRecord(t, str(self.kind[s, t]),
+                            float(self.latency_s[s, t]),
+                            float(self.onboard_s[s, t]),
+                            float(self.f1[s, t]),
+                            float(self.precision[s, t]),
+                            float(self.recall[s, t]))
+                for t in range(self.n_frames)]
+
+    @property
+    def records(self) -> List[FrameRecord]:
+        """Single-stream record view (the seed ``RunResult.records``)."""
+        if self.n_streams != 1:
+            raise ValueError(
+                f"report holds {self.n_streams} streams; use "
+                f"stream_records(s) to pick one")
+        return self.stream_records(0)
+
+    # -- export ----------------------------------------------------------
+    def summary(self) -> Dict[str, Union[str, float, int]]:
+        """Aggregates as a flat dict (benchmark/emit friendly)."""
+        return {
+            "scenario": self.scenario, "policy": self.policy,
+            "n_streams": self.n_streams, "n_frames": self.n_frames,
+            "mean_latency_s": self.mean_latency,
+            "mean_onboard_s": self.mean_onboard,
+            "mean_f1": self.mean_f1,
+            "mean_anchor_latency_s": self.mean_anchor_latency,
+            "anchor_rate": self.anchor_rate,
+        }
+
+    def to_rows(self) -> Iterable[Dict[str, Union[str, float, int]]]:
+        for s in range(self.n_streams):
+            for t in range(self.n_frames):
+                yield {"stream": s, "frame": t, "kind": str(self.kind[s, t]),
+                       "latency_s": float(self.latency_s[s, t]),
+                       "onboard_s": float(self.onboard_s[s, t]),
+                       "f1": float(self.f1[s, t]),
+                       "precision": float(self.precision[s, t]),
+                       "recall": float(self.recall[s, t])}
+
+    def to_csv(self, file=None) -> str:
+        """Write per-frame rows as CSV to ``file`` (path or file object);
+        returns the CSV text."""
+        buf = io.StringIO()
+        w = csv.DictWriter(buf, fieldnames=_CSV_FIELDS)
+        w.writeheader()
+        for row in self.to_rows():
+            w.writerow(row)
+        text = buf.getvalue()
+        if file is not None:
+            if hasattr(file, "write"):
+                file.write(text)
+            else:
+                with open(file, "w") as f:
+                    f.write(text)
+        return text

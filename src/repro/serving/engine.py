@@ -19,9 +19,7 @@ edge — the Fig. 14 comparison setting).
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +30,7 @@ from repro.data import scenes
 from repro.runtime import costmodel, netsim
 from repro.serving import tape as tape_lib
 from repro.serving.common import (PC_BYTES, RESULT_BYTES, ComponentTimes,
+                                  FrameRecord, RunReport,
                                   onboard_transform_time)
 
 
@@ -53,32 +52,11 @@ def _frame_stats(boxes3d, valid, gt_boxes, gt_visible, det_to_track):
                       n_valid.astype(jnp.float32)])
 
 
-@dataclasses.dataclass
-class FrameRecord:
-    frame: int
-    kind: str                  # anchor | test | transform
-    latency_s: float
-    onboard_s: float
-    f1: float
-    precision: float
-    recall: float
-
-
-@dataclasses.dataclass
-class RunResult:
-    records: List[FrameRecord]
-
-    @property
-    def mean_latency(self):
-        return float(np.mean([r.latency_s for r in self.records]))
-
-    @property
-    def mean_onboard(self):
-        return float(np.mean([r.onboard_s for r in self.records]))
-
-    @property
-    def mean_f1(self):
-        return float(np.mean([r.f1 for r in self.records]))
+# Deprecation shim (one PR): run outcomes are now the canonical
+# serving.common.RunReport — same aggregates, ``.records`` as a property.
+# The alias keeps type annotations and isinstance checks working; build
+# instances with ``RunReport.from_records``.
+RunResult = RunReport
 
 
 class MobyEngine:
@@ -108,6 +86,11 @@ class MobyEngine:
         self.tparams = transform.resolve_backend_params(
             base._replace(use_tba=use_tba), backend)
         self.sparams = sparams or scheduler.SchedulerParams()
+        # The per-frame FOS scoring cost only applies when the active
+        # policy actually offloads test frames (the paper's fos policy
+        # does; periodic/always/never_anchor don't).
+        self._charge_fos = use_fos and \
+            scheduler.get_policy(self.sparams.policy).uses_tests
         self.rng = np.random.default_rng(seed + 1)
         self.noise = scenes.DETECTOR_PROFILES[detector]
         self.frame_dt = scene_cfg.dt
@@ -134,10 +117,10 @@ class MobyEngine:
 
     def _onboard_transform_time(self, n_assoc: int, n_new: int) -> float:
         return onboard_transform_time(self.comp, n_assoc, n_new,
-                                      self.use_tba, self.use_fos)
+                                      self.use_tba, self._charge_fos)
 
     # ------------------------------------------------------------------
-    def run(self, n_frames: int) -> RunResult:
+    def run(self, n_frames: int) -> RunReport:
         if self.tape is not None and self.tape.n_frames < n_frames:
             raise ValueError(f"tape holds {self.tape.n_frames} frames, "
                              f"run asked for {n_frames}")
@@ -145,7 +128,7 @@ class MobyEngine:
             return self._run_baseline(n_frames)
         return self._run_moby(n_frames)
 
-    def _run_baseline(self, n_frames: int) -> RunResult:
+    def _run_baseline(self, n_frames: int) -> RunReport:
         recs = []
         for t, frame in enumerate(self.stream.frames(n_frames)):
             det, val = scenes.oracle_detect_3d(frame, self.rng, self.noise)
@@ -159,9 +142,9 @@ class MobyEngine:
                                     lat if self.mode == "edge_only" else 0.0,
                                     float(f1), float(p), float(r)))
             self.net.advance(self.frame_dt)
-        return RunResult(recs)
+        return RunReport.from_records(recs)
 
-    def _run_moby(self, n_frames: int) -> RunResult:
+    def _run_moby(self, n_frames: int) -> RunReport:
         recs: List[FrameRecord] = []
         mstate = transform.init_state(max_tracks=2 * self.cfg.max_obj,
                                       key=jax.random.key(0))
@@ -262,4 +245,4 @@ class MobyEngine:
             recs.append(FrameRecord(t, kind, latency, onboard, f1, p, r))
             wall += max(self.frame_dt, latency if is_anchor else 0.0)
             self.net.advance(self.frame_dt)
-        return RunResult(recs)
+        return RunReport.from_records(recs)

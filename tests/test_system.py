@@ -1,16 +1,15 @@
-"""End-to-end behaviour tests for the full Moby system (engine level)."""
+"""End-to-end behaviour tests for the full Moby system, driven through the
+repro.api facade (Scenario -> Session -> RunReport)."""
 import numpy as np
 import pytest
 
-from repro.data import scenes
-from repro.serving import engine as engine_lib
+from repro import api
 
 
 def _engine(mode, detector="pointpillar", **kw):
-    cfg = scenes.SceneConfig(max_obj=10, n_points=6144, mean_objects=5,
-                             density_scale=15000.0, seed=5)
-    return engine_lib.MobyEngine(cfg, detector, trace="belgium2", mode=mode,
-                                 seed=5, **kw)
+    scn = api.scenario("kitti-urban", mode=mode, detector=detector, seed=5,
+                       max_obj=10, n_points=6144, mean_objects=5, **kw)
+    return api.Session(scn)
 
 
 class TestEndToEnd:
