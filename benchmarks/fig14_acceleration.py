@@ -7,7 +7,7 @@ slow for the edge."""
 from __future__ import annotations
 
 from benchmarks.common import emit, make_session
-from repro.runtime import costmodel
+from repro.runtime import profiles
 
 BASELINES = ["complex_yolo", "frustum_convnet", "monodle"]
 FRAMES = 40
@@ -29,7 +29,7 @@ def run():
         emit(f"fig14/{base}/moby_f1", round(mb.mean_f1, 3),
              "paper: +5.5% vs monodle" if base == "monodle" else "")
     for slow in ("deep3dbox", "pseudo_lidar_pp"):
-        lat = costmodel.detector_latency(slow, costmodel.JETSON_TX2)
+        lat = profiles.detector_latency(slow, profiles.JETSON_TX2)
         anchor = {"deep3dbox": "paper=2834ms",
                   "pseudo_lidar_pp": "paper=5889ms"}[slow]
         emit(f"fig14/{slow}/edge_ms", round(lat * 1e3, 0), anchor)

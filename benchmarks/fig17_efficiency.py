@@ -7,7 +7,7 @@ power = 24.2 % of PointPillar, -73 % average; memory -17.3..-48.1 %."""
 from __future__ import annotations
 
 from benchmarks.common import emit
-from repro.runtime import costmodel
+from repro.runtime import profiles
 
 TX2_GPU_TDP_W = 12.0
 TX2_BASE_W = 2.5
@@ -24,7 +24,7 @@ MODEL_MB = {
 
 
 def _power(model: str, frame_budget_s: float = 0.1) -> float:
-    duty = min(costmodel.detector_latency(model, costmodel.JETSON_TX2)
+    duty = min(profiles.detector_latency(model, profiles.JETSON_TX2)
                / frame_budget_s, 1.0)
     return TX2_BASE_W + TX2_GPU_TDP_W * duty
 

@@ -8,7 +8,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import emit
-from repro.runtime import costmodel
+from repro.runtime import profiles
 
 
 MODELS_3D = ["pointpillar", "second", "pointrcnn", "pv_rcnn"]
@@ -18,20 +18,20 @@ MODELS_2D = ["yolov5n", "yolov5s", "yolov5m", "yolov5l"]
 def run():
     lat3 = {}
     for m in MODELS_3D:
-        lat = costmodel.detector_latency(m, costmodel.JETSON_TX2)
+        lat = profiles.detector_latency(m, profiles.JETSON_TX2)
         lat3[m] = lat
         emit(f"fig2/edge_only/{m}_ms", round(lat * 1e3, 1))
     mean3 = float(np.mean(list(lat3.values())))
     emit("fig2/edge_only/mean3d_ms", round(mean3 * 1e3, 1),
          "paper=912ms")
     for m in MODELS_2D:
-        lat = costmodel.detector_latency(m, costmodel.JETSON_TX2)
+        lat = profiles.detector_latency(m, profiles.JETSON_TX2)
         emit(f"fig2/edge_only/{m}_ms", round(lat * 1e3, 1))
-    ratio = costmodel.detector_latency("yolov5l", costmodel.JETSON_TX2) / \
+    ratio = profiles.detector_latency("yolov5l", profiles.JETSON_TX2) / \
         lat3["pointpillar"]
     emit("fig2/yolov5l_over_pointpillar", round(ratio, 3), "paper=0.62")
-    ratio41 = mean3 / costmodel.detector_latency("yolov5n",
-                                                 costmodel.JETSON_TX2)
+    ratio41 = mean3 / profiles.detector_latency("yolov5n",
+                                                 profiles.JETSON_TX2)
     emit("fig2/3d_over_2d_speed_ratio", round(ratio41, 1),
          "paper=up to 41x (§1)")
 

@@ -8,7 +8,7 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import emit
-from repro.runtime import costmodel, netsim
+from repro.runtime import netsim, profiles
 from repro.serving.engine import PC_BYTES, RESULT_BYTES
 
 MODELS = ["pointpillar", "second", "pointrcnn", "pv_rcnn"]
@@ -25,7 +25,7 @@ def run():
             for i in range(20):
                 net.t = i * 2.0
                 tx = net.transfer_time(PC_BYTES)
-                infer = costmodel.detector_latency(m, costmodel.RTX_2080TI)
+                infer = profiles.detector_latency(m, profiles.RTX_2080TI)
                 back = net.transfer_time(RESULT_BYTES, start_t=net.t + tx
                                          + infer)
                 samples.append(tx + infer + back)

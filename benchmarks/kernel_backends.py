@@ -6,6 +6,12 @@ For every registered hot op: wall time of the ``ref`` (pure jnp) vs the
 pallas column runs in interpret mode (correctness/parity path, expected
 slower); on a TPU it is the compiled kernel — the rows are the
 before/after ledger for per-kernel tuning work.
+
+Next to each measured wall time the benchmark reports the *modeled*
+latency of the same op on the registered device profiles (napkin
+FLOP/byte counts through ``profiles.roofline_latency``) — what the run
+*should* cost on the TX2 edge part and the TPU v5e kernel target, so the
+wall-time rows measured on this host have a hardware yardstick.
 """
 from __future__ import annotations
 
@@ -17,8 +23,32 @@ from benchmarks.common import emit, small_scene, timed
 from repro import ops
 from repro.core import projection, transform
 from repro.data import scenes
+from repro.runtime import profiles
+from repro.serving.common import nominal_transform_time
 
 _BACKENDS = ("ref", "pallas")
+_PROFILES = ("jetson_tx2", "tpu_v5e")
+
+
+def _op_costs(n, o, p, k):
+    """(flops, bytes) napkin estimates for the _per_op benchmark shapes
+    (fp32 host arrays; counts follow each ref implementation)."""
+    return {
+        # 3x4 + 3x4 projection matmuls + bounds tests per point.
+        "point_proj": (n * (2 * 12 + 2 * 12 + 10), n * (3 + 4) * 4),
+        # 64x64 pairwise intersection/union.
+        "iou2d": (64 * 64 * 16, (64 * 4 * 2 + 64 * 64) * 4),
+        # (O,K) hypotheses x P points: plane distance + threshold count.
+        "ransac_score": (o * k * p * 8, (o * p * 4 + o * k * 4) * 4),
+        # One pass over the points, max-combine into the grid.
+        "pillar_scatter": (n * 32 * 2, (n * 33 + 1024 * 32) * 4),
+        # 2 matmuls over the (Sq, Sk) score matrix.
+        "flash_attention": (4 * 8 * 512 * 512 * 64,
+                            (3 * 8 * 512 * 64 + 8 * 512 * 512) * 4),
+        # Single-token decode over the cache.
+        "decode_attention": (4 * 4 * 8 * 1024 * 64,
+                             4 * (2 * 4 * 1024 * 64 + 8 * 64) * 4),
+    }
 
 
 def _per_op(rng):
@@ -69,6 +99,17 @@ def _per_op(rng):
         for name, (fn, args) in cases(be).items():
             t, _ = timed(fn, *args, warmup=2, iters=5)
             emit(f"kernel_backends/{name}/{be}_ms", round(t * 1e3, 3))
+    # Modeled per-op latency on the registered device profiles (the
+    # hardware yardstick next to this host's wall times).
+    costs = _op_costs(n, o, p, k)
+    for name, (flops, bytes_moved) in costs.items():
+        for prof in _PROFILES:
+            t = profiles.roofline_latency(profiles.get_profile(prof),
+                                          flops, bytes_moved)
+            emit(f"kernel_backends/{name}/modeled_{prof}_ms",
+                 round(t * 1e3, 4),
+                 f"roofline: {flops / 1e6:.1f} MFLOP, "
+                 f"{bytes_moved / 1e6:.2f} MB")
 
 
 def _end_to_end():
@@ -92,6 +133,15 @@ def _end_to_end():
         emit(f"kernel_backends/e2e_transform_step/{be}_ms",
              round(t * 1e3, 2),
              "full 2D->3D frame transformation")
+    # Modeled end-to-end frame cost from each device profile's component
+    # model (what the engines charge as on-board time, see
+    # runtime.profiles.component_times).
+    for prof in _PROFILES:
+        comp = profiles.component_times(prof)
+        t = nominal_transform_time(comp, use_tba=True, use_fos=True)
+        emit(f"kernel_backends/e2e_transform_step/modeled_{prof}_ms",
+             round(t * 1e3, 2),
+             "profile component model (Fig. 15)")
 
 
 def run():

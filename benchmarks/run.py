@@ -28,6 +28,7 @@ MODULES = [
     "fig17_efficiency",
     "fleet_scaling",
     "kernel_backends",
+    "sweep",
     "roofline",
 ]
 

@@ -17,18 +17,25 @@ One stable surface for every scale, speed and scenario-diversity change::
 * :class:`RunReport` — the canonical packed outcome (re-exported from
   ``repro.serving``);
 * scheduler policies (``fos``, ``periodic(k)``, ``always_anchor``,
-  ``never_anchor``) are resolved through ``repro.core.scheduler``'s policy
-  registry — re-exported here so callers can enumerate/extend the slot.
+  ``never_anchor``, ``adaptive``) are resolved through
+  ``repro.core.scheduler``'s policy registry — re-exported here so
+  callers can enumerate/extend the slot;
+* device profiles (``jetson_tx2``, ``rtx_2080ti``, ``tpu_v5e``) are
+  resolved through ``repro.runtime.profiles``' registry — the
+  ``Scenario.device`` slot — re-exported likewise.
 """
 from repro.api.scenario import (Scenario, list_scenarios, register_scenario,
                                 scenario)
 from repro.api.session import Session
 from repro.core.scheduler import (SchedulerPolicy, get_policy, list_policies,
                                   register_policy)
+from repro.runtime.profiles import (DeviceProfile, get_profile,
+                                    list_profiles, register_profile)
 from repro.serving.common import FrameRecord, RunReport
 
 __all__ = [
-    "FrameRecord", "RunReport", "Scenario", "SchedulerPolicy", "Session",
-    "get_policy", "list_policies", "list_scenarios", "register_policy",
-    "register_scenario", "scenario",
+    "DeviceProfile", "FrameRecord", "RunReport", "Scenario",
+    "SchedulerPolicy", "Session", "get_policy", "get_profile",
+    "list_policies", "list_profiles", "list_scenarios", "register_policy",
+    "register_profile", "register_scenario", "scenario",
 ]

@@ -25,6 +25,7 @@ from typing import Callable, Dict, Optional
 from repro.core import scheduler, transform
 from repro.data import scenes
 from repro.fleet import cloud as cloud_lib
+from repro.runtime import profiles
 from repro.serving.common import ComponentTimes
 
 
@@ -45,10 +46,18 @@ class Scenario:
     policy: Optional[str] = None       # scheduler policy slot
     tparams: Optional[transform.TransformParams] = None
     sparams: Optional[scheduler.SchedulerParams] = None
-    comp: Optional[ComponentTimes] = None
+    comp: Optional[ComponentTimes] = None  # None = derive from device
     cloud: Optional[cloud_lib.CloudBatcherConfig] = None
-    backend: Optional[str] = None      # ops backend: "ref"/"pallas"/None=auto
+    backend: Optional[str] = None      # ops backend: "ref"/"pallas"/
+                                       # "auto" (per-op)/None=env default
+    device: str = "jetson_tx2"         # edge device-profile slot
+                                       # (runtime.profiles registry)
     seed: int = 0
+
+    def device_profile(self) -> profiles.DeviceProfile:
+        """The effective edge device profile (validated against the
+        profile registry — unknown names raise KeyError listing it)."""
+        return profiles.get_profile(self.device)
 
     def scheduler_params(self) -> scheduler.SchedulerParams:
         """The effective SchedulerParams: explicit ``sparams`` plus the

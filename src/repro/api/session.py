@@ -13,7 +13,7 @@ from typing import Union
 
 from repro.api.scenario import Scenario, scenario as _scenario
 from repro.fleet.engine import FleetEngine
-from repro.serving.common import ComponentTimes, RunReport
+from repro.serving.common import RunReport
 from repro.serving.engine import MobyEngine
 
 
@@ -33,7 +33,7 @@ class Session:
             scn = _scenario(scn)
         self.scenario = scn
         sparams = scn.scheduler_params()
-        comp = scn.comp or ComponentTimes()
+        scn.device_profile()            # fail fast on unknown devices
         if scn.n_streams < 1:
             raise ValueError(f"n_streams must be >= 1, got {scn.n_streams}")
         self._scan_engine = None
@@ -45,7 +45,7 @@ class Session:
                 scn.scene, scn.detector, trace=scn.trace, mode=scn.mode,
                 use_fos=scn.use_fos, use_tba=scn.use_tba,
                 tparams=scn.tparams, sparams=sparams, seed=scn.seed,
-                comp=comp, backend=scn.backend)
+                comp=scn.comp, backend=scn.backend, device=scn.device)
         else:
             self.engine = self._scan_engine = self._fleet(scn.n_streams)
 
@@ -55,8 +55,8 @@ class Session:
             scn.scene, scn.detector, n_streams=n_streams, trace=scn.trace,
             mode=scn.mode, use_fos=scn.use_fos, use_tba=scn.use_tba,
             tparams=scn.tparams, sparams=scn.scheduler_params(),
-            seed=scn.seed, comp=scn.comp or ComponentTimes(),
-            cloud_cfg=scn.cloud, backend=scn.backend)
+            seed=scn.seed, comp=scn.comp,
+            cloud_cfg=scn.cloud, backend=scn.backend, device=scn.device)
 
     @property
     def n_streams(self) -> int:

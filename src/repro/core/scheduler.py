@@ -20,10 +20,18 @@ string in ``TransformParams``). Registered policies:
 * ``always_anchor``  — every frame offloaded as an anchor (cloud-bound
   upper bound on accuracy, worst-case latency);
 * ``never_anchor``   — anchor frame 0 only, then pure on-device
-  transformation (drift lower bound).
+  transformation (drift lower bound);
+* ``adaptive``       — Panopticus-style cost/drift trade-off: anchors when
+  the predicted accuracy drift (EWMA of test error, grown per frame since
+  the last anchor) exceeds an error budget scaled by how expensive
+  offloading currently is (modeled edge vs offload frame cost from the
+  active device profile + observed uplink bandwidth), and adapts its test
+  cadence to the drift level.
 
-This is the slot a Panopticus-style adaptive policy plugs into (see
-ROADMAP.md): register a new policy, name it in a Scenario, done.
+``SchedulerState`` carries *running telemetry* for such policies — the
+test-error EWMA it maintains itself, plus the observed uplink bandwidth
+and the modeled edge/offload frame costs the engines fold in per frame
+through :func:`observe_telemetry` (pure, so it composes with vmap/scan).
 
 The state machine itself is jit-compatible; the asynchronous transport
 (when test results arrive) is driven by the engine/netsim, which feeds
@@ -59,6 +67,12 @@ class SchedulerState(NamedTuple):
     last_error: jnp.ndarray          # float: 1 - F1 of last test comparison
     tests_sent: jnp.ndarray          # int32 counters (diagnostics)
     anchors_triggered: jnp.ndarray
+    # -- running telemetry (adaptive-policy inputs) ---------------------
+    err_ewma: jnp.ndarray            # float32 EWMA of observed test error
+    frames_since_anchor: jnp.ndarray  # int32
+    bw_mbps: jnp.ndarray             # float32 observed uplink bandwidth
+    edge_cost_s: jnp.ndarray         # float32 modeled on-device frame cost
+    offload_cost_s: jnp.ndarray      # float32 modeled anchor offload cost
 
 
 class SchedulerActions(NamedTuple):
@@ -89,7 +103,29 @@ def init_scheduler(max_obj: int) -> SchedulerState:
         last_error=jnp.float32(0.0),
         tests_sent=jnp.int32(0),
         anchors_triggered=jnp.int32(0),
+        err_ewma=jnp.float32(0.0),
+        frames_since_anchor=jnp.int32(0),
+        bw_mbps=jnp.float32(0.0),         # 0 = not yet observed
+        edge_cost_s=jnp.float32(0.0),
+        offload_cost_s=jnp.float32(0.0),
     )
+
+
+def observe_telemetry(state: SchedulerState, bw_mbps=None, edge_cost_s=None,
+                      offload_cost_s=None) -> SchedulerState:
+    """Fold externally observed telemetry into the state: the uplink
+    bandwidth the netsim currently delivers and the modeled per-frame
+    edge/offload costs from the active device profile. Pure — engines call
+    it once per frame before :func:`scheduler_pre`; scalars broadcast over
+    a fleet's stream axis, per-stream arrays pass through unchanged."""
+    upd = {}
+    for name, v in (("bw_mbps", bw_mbps), ("edge_cost_s", edge_cost_s),
+                    ("offload_cost_s", offload_cost_s)):
+        if v is not None:
+            cur = getattr(state, name)
+            upd[name] = jnp.broadcast_to(
+                jnp.asarray(v, jnp.float32), jnp.shape(cur))
+    return state._replace(**upd) if upd else state
 
 
 def init_scheduler_fleet(n_streams: int, max_obj: int) -> SchedulerState:
@@ -173,6 +209,11 @@ def scheduler_post(state: SchedulerState, actions: SchedulerActions,
 # Built-in policies
 # ---------------------------------------------------------------------------
 
+# Telemetry smoothing for the test-error EWMA (maintained by the shared
+# fos/adaptive post step; responsive enough that two consecutive bad tests
+# dominate the estimate).
+EWMA_ALPHA = 0.5
+
 
 def _fos_pre(state: SchedulerState,
              params: SchedulerParams) -> SchedulerActions:
@@ -203,7 +244,13 @@ def _fos_post(state: SchedulerState, actions: SchedulerActions,
     test_inflight = (state.test_inflight & ~test_arrived) | actions.send_test
     frames_since_test = jnp.where(actions.send_test | actions.run_as_anchor,
                                   0, state.frames_since_test + 1)
-    return SchedulerState(
+    # Telemetry: smooth each observed test error into the EWMA; an anchor
+    # resets the drift clock *and* the drift estimate (the tracker was just
+    # reseeded from trusted cloud detections).
+    ewma = jnp.where(got, (1 - EWMA_ALPHA) * state.err_ewma
+                     + EWMA_ALPHA * (1.0 - f1), state.err_ewma)
+    ewma = jnp.where(actions.run_as_anchor, 0.0, ewma)
+    return state._replace(
         frames_since_test=frames_since_test,
         test_inflight=test_inflight,
         buf_boxes=buf_boxes,
@@ -212,6 +259,9 @@ def _fos_post(state: SchedulerState, actions: SchedulerActions,
         last_error=error,
         tests_sent=state.tests_sent + actions.send_test.astype(jnp.int32),
         anchors_triggered=state.anchors_triggered + bad.astype(jnp.int32),
+        err_ewma=ewma,
+        frames_since_anchor=jnp.where(actions.run_as_anchor, 0,
+                                      state.frames_since_anchor + 1),
     )
 
 
@@ -227,6 +277,8 @@ def _anchor_only_post(state: SchedulerState, actions: SchedulerActions,
         anchor_pending=jnp.where(anchored, False, state.anchor_pending),
         anchors_triggered=state.anchors_triggered
         + anchored.astype(jnp.int32),
+        frames_since_anchor=jnp.where(anchored, 0,
+                                      state.frames_since_anchor + 1),
     )
 
 
@@ -278,7 +330,58 @@ def _make_never_anchor(arg: Optional[int]) -> SchedulerPolicy:
                            uses_tests=False)
 
 
+# Adaptive-policy constants (hand-tuned on the synthetic scenes; see
+# ROADMAP "Adaptive-policy calibration"):
+# per-frame growth of the predicted drift since the last anchor — the
+# tracker's association error compounds roughly linearly open-loop;
+DRIFT_GROWTH = 0.15
+# error budget = (1 - q_t) * (BUDGET_BASE + BUDGET_COST * rel_offload);
+BUDGET_BASE = 0.2
+BUDGET_COST = 0.3
+# test period swings between PERIOD_MAX * n_t (calm) and
+# PERIOD_MIN * n_t (predicted drift at the budget).
+PERIOD_MAX = 2.0
+PERIOD_MIN = 1.0
+
+
+def _adaptive_pre(state: SchedulerState,
+                  params: SchedulerParams) -> SchedulerActions:
+    """Cost/drift trade-off (Panopticus-style execution scheduling).
+
+    Anchor when the *predicted* accuracy drift exceeds an error budget
+    scaled by the current offload cost: when the modeled anchor round-trip
+    is cheap relative to on-device processing the budget tightens (offload
+    eagerly), when the uplink is congested it stretches (tolerate drift).
+    Test cadence adapts the same way — calm streams stretch the fos test
+    period, drifting streams shrink it.
+    """
+    pred_err = state.err_ewma * (
+        1.0 + DRIFT_GROWTH * state.frames_since_anchor.astype(jnp.float32))
+    edge = jnp.maximum(state.edge_cost_s, 1e-4)
+    off = state.offload_cost_s
+    # Relative offload cost in (0, 1); 0.5 (neutral) until telemetry flows.
+    rel = jnp.where(off > 0, off / (off + edge), jnp.float32(0.5))
+    budget = (1.0 - params.q_t) * (BUDGET_BASE + BUDGET_COST * rel)
+    run_as_anchor = state.anchor_pending | (pred_err > budget)
+    err_ratio = jnp.clip(pred_err / jnp.maximum(budget, 1e-6), 0.0, 1.0)
+    period = jnp.maximum(jnp.round(params.n_t * (
+        PERIOD_MAX - (PERIOD_MAX - PERIOD_MIN) * err_ratio)), 1.0)
+    due = state.frames_since_test.astype(jnp.float32) >= period - 1.0
+    send_test = (~run_as_anchor) & due & (~state.test_inflight)
+    return SchedulerActions(send_test=send_test, run_as_anchor=run_as_anchor)
+
+
+def _make_adaptive(arg: Optional[int]) -> SchedulerPolicy:
+    if arg is not None:
+        raise KeyError("policy 'adaptive' takes no argument; tune "
+                       "SchedulerParams.n_t / q_t instead")
+    # Shares the fos post step: test buffering/scoring plus the telemetry
+    # (err_ewma, frames_since_anchor) both policies maintain.
+    return SchedulerPolicy("adaptive", _adaptive_pre, _fos_post)
+
+
 register_policy("fos", _make_fos)
 register_policy("periodic", _make_periodic)
 register_policy("always_anchor", _make_always_anchor)
 register_policy("never_anchor", _make_never_anchor)
+register_policy("adaptive", _make_adaptive)

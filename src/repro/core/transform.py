@@ -35,18 +35,20 @@ class TransformParams(NamedTuple):
     pts_per_obj: int = 256        # cluster buffer size
     use_tba: bool = True          # tracking-based association on/off (Table 4)
     # Ops backend for the hot ops (point projection, IoU, RANSAC scoring):
-    # "ref" / "pallas" / "auto" (= MOBY_BACKEND env, else platform default).
-    # A plain string keeps the NamedTuple hashable for static jit args.
-    backend: str = "auto"
+    # "ref" / "pallas" / "auto" (per-op from the autotune table) / ""
+    # (defer to MOBY_BACKEND env, else platform default). A plain string
+    # keeps the NamedTuple hashable for static jit args.
+    backend: str = ""
 
 
 def resolve_backend_params(params: TransformParams,
                            backend: str | None = None) -> TransformParams:
-    """Apply an optional backend override, then pin "auto" to its resolved
-    value ("ref" / "pallas"). Pinning matters because TransformParams is a
-    static jit cache key: a later MOBY_BACKEND change must not be masked
-    by a cache hit on an unresolved "auto". Engines call this once at
-    construction.
+    """Apply an optional backend override, then pin the deferred "" to its
+    resolved value ("ref" / "pallas", or "auto" when MOBY_BACKEND=auto
+    asks for per-op autotuned resolution). Pinning matters because
+    TransformParams is a static jit cache key: a later MOBY_BACKEND change
+    must not be masked by a cache hit on an unresolved "". Engines call
+    this once at construction.
     """
     from repro import ops
     if backend is not None:

@@ -6,13 +6,13 @@ lax.scan over frames), contending for a shared cell uplink and a batching
 cloud detector. See fleet.engine.FleetEngine.
 """
 from repro.fleet.cloud import CloudBatcher, CloudBatcherConfig
-from repro.fleet.engine import FleetEngine, FleetRunResult
+from repro.fleet.engine import FleetEngine
 from repro.fleet.step import (FleetState, FrameInputs, ScanNetParams,
                               init_fleet_state, make_fleet_scan,
                               make_fleet_step)
 
 __all__ = [
-    "CloudBatcher", "CloudBatcherConfig", "FleetEngine", "FleetRunResult",
+    "CloudBatcher", "CloudBatcherConfig", "FleetEngine",
     "FleetState", "FrameInputs", "ScanNetParams", "init_fleet_state",
     "make_fleet_scan", "make_fleet_step",
 ]

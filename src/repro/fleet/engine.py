@@ -34,17 +34,11 @@ from repro.core import projection, scheduler, transform
 from repro.data import scenes
 from repro.fleet import cloud as cloud_lib
 from repro.fleet import step as step_lib
-from repro.runtime import costmodel, netsim
+from repro.runtime import netsim, profiles
 from repro.serving import tape as tape_lib
 from repro.serving.common import (PC_BYTES, RESULT_BYTES, ComponentTimes,
-                                  RunReport, onboard_transform_time)
-
-
-# Deprecation shim (one PR): the fleet's packed per-stream-per-frame
-# outcome and its aggregates now live on the canonical
-# serving.common.RunReport (same shapes, same properties, plus is_anchor /
-# send_test derived from the kind strings). Build via report_from_packed.
-FleetRunResult = RunReport
+                                  RunReport, modeled_frame_costs,
+                                  onboard_transform_time)
 
 
 def report_from_packed(packed_sf: np.ndarray) -> RunReport:
@@ -70,10 +64,11 @@ class FleetEngine:
                  use_fos: bool = True, use_tba: bool = True,
                  tparams: Optional[transform.TransformParams] = None,
                  sparams: Optional[scheduler.SchedulerParams] = None,
-                 seed: int = 0, comp: ComponentTimes = ComponentTimes(),
+                 seed: int = 0, comp: Optional[ComponentTimes] = None,
                  tapes: Optional[Sequence[tape_lib.FrameTape]] = None,
                  cloud_cfg: Optional[cloud_lib.CloudBatcherConfig] = None,
-                 backend: Optional[str] = None):
+                 backend: Optional[str] = None,
+                 device: str = "jetson_tx2"):
         if mode not in ("moby", "moby_onboard"):
             raise ValueError(f"FleetEngine serves moby modes, got {mode!r}")
         self.cfg = scene_cfg
@@ -83,7 +78,10 @@ class FleetEngine:
         self.mode = mode
         self.use_fos = use_fos
         self.use_tba = use_tba
-        self.comp = comp
+        # Edge device profile: modeled component times + edge inference
+        # (runtime.profiles; the cloud side stays on the 2080Ti profile).
+        self.profile = profiles.get_profile(device)
+        self.comp = comp or profiles.component_times(self.profile)
         self.seed = seed
         self.frame_dt = scene_cfg.dt
         base = tparams or transform.TransformParams()
@@ -102,7 +100,7 @@ class FleetEngine:
             tr=jnp.asarray(tr), p=jnp.asarray(p),
             height=scene_cfg.img_h, width=scene_cfg.img_w)
         self.uplink = netsim.SharedUplink(trace, seed=seed)
-        infer = costmodel.detector_latency(detector, costmodel.RTX_2080TI)
+        infer = profiles.detector_latency(detector, profiles.RTX_2080TI)
         self.cloud_cfg = cloud_cfg or cloud_lib.CloudBatcherConfig(
             infer_s=infer)
         self.batcher = cloud_lib.CloudBatcher(self.cloud_cfg)
@@ -132,8 +130,22 @@ class FleetEngine:
         return tape_lib.FrameTape(*(a[:, :n_frames] for a in self._stack))
 
     def _edge_infer(self) -> float:
-        return costmodel.detector_latency(self.detector,
-                                          costmodel.JETSON_TX2)
+        return profiles.detector_latency(self.detector, self.profile)
+
+    def _observe_telemetry(self,
+                           state: step_lib.FleetState) -> step_lib.FleetState:
+        """Per-frame telemetry for cost-aware policies: every stream of
+        the fleet shares the cell, so each observes its fair share of the
+        current trace bandwidth."""
+        bw = self.uplink.current_bw_mbps(n_sharers=self.n_streams)
+        edge, off = modeled_frame_costs(
+            self.comp, self.detector, bw, self.uplink.rtt_s, self.use_tba,
+            self._charge_fos, onboard_anchors=self.mode == "moby_onboard",
+            edge_device=self.profile)
+        sched = scheduler.observe_telemetry(state.sched, bw_mbps=bw,
+                                            edge_cost_s=edge,
+                                            offload_cost_s=off)
+        return state._replace(sched=sched)
 
     def _frame_inputs(self, stack: tape_lib.FrameTape,
                       t: int) -> step_lib.FrameInputs:
@@ -161,6 +173,8 @@ class FleetEngine:
         for t in range(n_frames):
             inp = self._frame_inputs(stack, t)
             arrived = walls >= inflight_at
+            if self.use_fos:
+                state = self._observe_telemetry(state)
             state, packed = self._step(state, inp, jnp.asarray(arrived),
                                        jnp.int32(t))
             pk = np.asarray(packed)            # the one fetch per frame

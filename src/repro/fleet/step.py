@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import metrics, scheduler, transform
-from repro.serving.common import ComponentTimes
+from repro.serving.common import ComponentTimes, nominal_transform_time
 
 # Columns of the packed per-stream stats row (the one host fetch per frame).
 COL_IS_ANCHOR = 0
@@ -173,11 +173,29 @@ def make_fleet_scan(n_streams: int, calib, params, sparams,
     step = functools.partial(_stream_step, calib=calib, params=params,
                              sparams=sparams, use_fos=use_fos)
     vstep = jax.vmap(step, in_axes=(0, 0, 0, None))
+    # Modeled nominal on-device frame cost (scheduler telemetry).
+    edge_cost_s = nominal_transform_time(comp, params.use_tba, charge_fos)
 
     def body(carry, xs):
         state, walls, inflight_at, busy = carry
         t, inp = xs
         test_arrived = walls >= inflight_at
+        net_t = t.astype(jnp.float32) * net.frame_dt
+        if use_fos:
+            # Telemetry for cost-aware policies — the traceable twin of
+            # FleetEngine._observe_telemetry: each stream observes its
+            # fair share of the current trace bandwidth plus the modeled
+            # edge/offload frame costs.
+            idx_now = (net_t / net.trace_dt).astype(jnp.int32) \
+                % net.bw_mbps.shape[0]
+            bw_share = net.bw_mbps[idx_now] / float(n_streams)
+            offload = edge_infer_s if onboard_anchors else (
+                2.0 * net.rtt_s
+                + (net.pc_mbits + net.result_mbits) / bw_share
+                + net.infer_s)
+            state = state._replace(sched=scheduler.observe_telemetry(
+                state.sched, bw_mbps=bw_share, edge_cost_s=edge_cost_s,
+                offload_cost_s=offload))
         state, packed = vstep(state, inp, test_arrived, t)
         is_anchor = packed[:, COL_IS_ANCHOR] > 0.5
         send_test = packed[:, COL_SEND_TEST] > 0.5
@@ -187,7 +205,6 @@ def make_fleet_scan(n_streams: int, calib, params, sparams,
         cloud_anchor = jnp.zeros_like(is_anchor) if onboard_anchors \
             else is_anchor
         n_up = jnp.sum(cloud_anchor | send_test)
-        net_t = t.astype(jnp.float32) * net.frame_dt
         idx = ((net_t + net.rtt_s) / net.trace_dt).astype(jnp.int32) \
             % net.bw_mbps.shape[0]
         share = net.bw_mbps[idx] / jnp.maximum(n_up, 1).astype(jnp.float32)

@@ -36,11 +36,12 @@ class PillarConfig:
     feat_dim: int = 32
     backbone_dims: tuple = (32, 64, 128)
     n_anchors: int = 2
-    # Ops backend for pillar_scatter: "ref" / "pallas" / "auto". "auto"
-    # resolves via MOBY_BACKEND / platform at first trace and is cached
-    # with this config (configs are often module-level constants, so
-    # eager pinning would freeze the env too early).
-    backend: str = "auto"
+    # Ops backend for pillar_scatter: "ref" / "pallas" / "auto" / "".
+    # The deferred "" resolves via MOBY_BACKEND / platform at first trace
+    # and is cached with this config (configs are often module-level
+    # constants, so eager pinning would freeze the env too early);
+    # "auto" picks per op from the measured table (repro.ops.autotune).
+    backend: str = ""
     second_style: bool = False    # z-binned dense-voxel entry (SECOND)
     z_bins: int = 8
 

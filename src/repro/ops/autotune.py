@@ -1,0 +1,137 @@
+"""Startup micro-benchmark table backing the ``"auto"`` ops backend.
+
+The registry's per-process resolution (env var / platform default) picks
+ONE backend for every op, but the right choice is per *op* per *host*:
+on a CPU host the jnp refs win everywhere, on a TPU the Pallas kernels
+win the regular ops while XLA still wins the gather-shaped ones. This
+module measures it instead of guessing — the execution-plan half of
+Panopticus-style adaptivity (the scheduling half is the ``adaptive``
+policy in ``core/scheduler.py``):
+
+* :func:`measurement_table` — lazily times every registered hot op on
+  small representative shapes under each backend (compile excluded,
+  best-of-k wall time) and caches the table for the process;
+* :func:`best_backend` — argmin over a row; ``registry.get_impl(name,
+  "auto")`` resolves through it per op;
+* :func:`set_measurements` / :func:`clear_measurements` — pin a table
+  (tests, or measurements recorded on the real target host) or drop the
+  cache. Resolution is deterministic given a pinned table — pin *before*
+  tracing, because resolved impls are baked into jit caches.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.ops import registry
+
+# Best-of-k timing; the shapes are tiny so the whole table costs well
+# under a second per backend on CPU (interpret-mode pallas included).
+_ITERS = 3
+
+_TABLE: Optional[Dict[str, Dict[str, float]]] = None
+_PINNED = False
+
+
+def _bench_cases() -> Dict[str, tuple]:
+    """One representative call per registered op (positional args matching
+    the registered impl signatures). Shapes follow the Moby hot path
+    (kitti-urban scene scale) rather than micro sizes — on tiny inputs
+    dispatch overhead dominates and every backend measures alike, which
+    would make "auto" meaningless."""
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(0)
+    pts = jnp.asarray(rng.normal(0, 20, (8192, 3)).astype(np.float32))
+    tr = jnp.asarray(rng.normal(size=(3, 4)).astype(np.float32))
+    pm = jnp.asarray(rng.normal(size=(3, 4)).astype(np.float32))
+    bx = jnp.asarray(rng.uniform(0, 100, (64, 4)).astype(np.float32))
+    cl_pts = jnp.asarray(rng.normal(0, 5, (12, 256, 3)).astype(np.float32))
+    cl_val = jnp.asarray(rng.uniform(size=(12, 256)) < 0.8)
+    nrm = rng.normal(size=(12, 30, 3))
+    nrm /= np.linalg.norm(nrm, axis=-1, keepdims=True)
+    nrm = jnp.asarray(nrm.astype(np.float32))
+    off = jnp.asarray(rng.normal(0, 3, (12, 30)).astype(np.float32))
+    feats = jnp.asarray(rng.normal(size=(4096, 32)).astype(np.float32))
+    pid = jnp.asarray(rng.integers(0, 1024, 4096).astype(np.int32))
+    pval = jnp.asarray(rng.uniform(size=4096) < 0.9)
+    q = jnp.asarray(rng.normal(size=(1, 4, 256, 64)).astype(np.float32))
+    kv = jnp.asarray(rng.normal(size=(1, 2, 256, 64)).astype(np.float32))
+    dq = jnp.asarray(rng.normal(size=(2, 4, 64)).astype(np.float32))
+    dkv = jnp.asarray(rng.normal(size=(2, 2, 512, 64)).astype(np.float32))
+    dpos = jnp.asarray(rng.integers(1, 512, 2).astype(np.int32))
+    return {
+        "point_proj": (pts, tr, pm, 128, 416),
+        "iou2d": (bx, bx),
+        "ransac_score": (cl_pts, cl_val, nrm, off, 0.1),
+        "pillar_scatter": (feats, pid, pval, 1024),
+        "flash_attention": (q, kv, kv, True),
+        "decode_attention": (dq, dkv, dkv, dpos),
+    }
+
+
+def measure_op(name: str, backend: str, args: tuple,
+               iters: int = _ITERS) -> float:
+    """Best-of-``iters`` wall seconds of one op under one backend (first
+    call compiles and is excluded)."""
+    import jax
+
+    impl = registry.get_impl(name, backend)
+    jitted = jax.jit(impl, static_argnums=tuple(
+        i for i, a in enumerate(args) if not hasattr(a, "shape")))
+    jax.block_until_ready(jitted(*args))    # compile + warm
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(jitted(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def measurement_table(force: bool = False) -> Dict[str, Dict[str, float]]:
+    """The per-op measured-latency table ``{op: {backend: seconds}}`` for
+    this host, measured lazily on first use and cached for the process.
+    ``force=True`` re-measures (unless a table was pinned)."""
+    global _TABLE
+    if _TABLE is not None and (_PINNED or not force):
+        return _TABLE
+    import repro.ops.api  # noqa: F401  (ensure ops are registered)
+
+    table: Dict[str, Dict[str, float]] = {}
+    for name, args in _bench_cases().items():
+        if name not in registry.list_ops():
+            continue
+        table[name] = {be: measure_op(name, be, args)
+                       for be in registry.BACKENDS}
+    _TABLE = table
+    return _TABLE
+
+
+def set_measurements(table: Dict[str, Dict[str, float]]) -> None:
+    """Pin a measurement table (skipping the startup micro-benchmark):
+    deterministic "auto" resolution for tests, or rows recorded on the
+    real target host. Pin before tracing any "auto" consumer."""
+    global _TABLE, _PINNED
+    _TABLE = {op: dict(row) for op, row in table.items()}
+    _PINNED = True
+
+
+def clear_measurements() -> None:
+    """Drop the cached/pinned table; the next "auto" resolution re-runs
+    the startup micro-benchmark."""
+    global _TABLE, _PINNED
+    _TABLE = None
+    _PINNED = False
+
+
+def best_backend(name: str) -> str:
+    """The measured-fastest backend for ``name`` on this host. Ops without
+    a measurement row fall back to the process default; exact ties resolve
+    to the first of ``registry.BACKENDS`` (deterministic)."""
+    row = measurement_table().get(name)
+    if not row:
+        default = registry.default_backend()
+        return default if default in registry.BACKENDS else "ref"
+    return min(registry.BACKENDS, key=lambda be: row.get(be, float("inf")))

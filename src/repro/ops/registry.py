@@ -12,13 +12,17 @@ implementation per backend:
 
 Resolution order for the active backend:
 
-1. an explicit ``backend=`` argument ("ref" / "pallas"),
+1. an explicit ``backend=`` argument ("ref" / "pallas" / "auto"),
 2. the ``MOBY_BACKEND`` environment variable,
 3. the platform default: "pallas" on TPU, "ref" elsewhere.
 
-``"auto"`` (or ``None``) means "defer to 2-3". Consumers carry the
-backend as a plain string (hashable, so it can live in NamedTuple params
-used as static jit arguments); resolution happens at trace time.
+``None`` (or ``""``) means "defer to 2-3". ``"auto"`` is the *autotuned*
+backend: :func:`get_impl` resolves it per **op** from the startup
+micro-benchmark table (``repro.ops.autotune``) — the measured-fastest
+implementation for each op on this host, rather than one per-process
+choice. Consumers carry the backend as a plain string (hashable, so it
+can live in NamedTuple params used as static jit arguments); resolution
+happens at trace time.
 """
 from __future__ import annotations
 
@@ -49,21 +53,26 @@ def default_interpret() -> bool:
 
 
 def default_backend() -> str:
-    """Backend used when nothing was requested explicitly."""
+    """Backend used when nothing was requested explicitly. May return
+    ``"auto"`` (MOBY_BACKEND=auto): per-op autotuned resolution."""
     env = os.environ.get(_ENV_VAR, "").strip().lower()
     if env:
-        if env not in BACKENDS:
+        if env not in BACKENDS + (AUTO,):
             raise ValueError(
-                f"{_ENV_VAR}={env!r}: expected one of {BACKENDS}")
+                f"{_ENV_VAR}={env!r}: expected one of "
+                f"{BACKENDS + (AUTO,)}")
         return env
     return "pallas" if on_tpu() else "ref"
 
 
 def resolve_backend(backend: str | None = None) -> str:
-    """Explicit argument > MOBY_BACKEND env > platform default."""
-    if backend is None or backend == AUTO or backend == "":
+    """Explicit argument > MOBY_BACKEND env > platform default.
+
+    Returns "ref", "pallas", or "auto" — the last meaning "per-op from the
+    measured table" (resolved by :func:`get_impl` at lookup time)."""
+    if backend is None or backend == "":
         return default_backend()
-    if backend not in BACKENDS:
+    if backend not in BACKENDS + (AUTO,):
         raise ValueError(f"unknown backend {backend!r}: expected one of "
                          f"{BACKENDS} (or 'auto')")
     return backend
@@ -75,11 +84,16 @@ def register_op(name: str, *, ref: Callable, pallas: Callable) -> None:
 
 
 def get_impl(name: str, backend: str | None = None) -> Callable:
-    """Look up an op's implementation for a (resolved) backend."""
+    """Look up an op's implementation for a (resolved) backend. "auto"
+    resolves per op through the measured-latency table."""
     if name not in _REGISTRY:
         raise KeyError(f"op {name!r} is not registered; known ops: "
                        f"{sorted(_REGISTRY)}")
-    return _REGISTRY[name][resolve_backend(backend)]
+    resolved = resolve_backend(backend)
+    if resolved == AUTO:
+        from repro.ops import autotune  # deferred: autotune imports us
+        resolved = autotune.best_backend(name)
+    return _REGISTRY[name][resolved]
 
 
 def list_ops() -> list[str]:

@@ -1,1 +1,2 @@
-"""Distributed runtime: netsim, cost model, checkpointing, fault tolerance."""
+"""Distributed runtime: netsim, device-profile registry (profiles), LM
+roofline cost model (costmodel), checkpointing, fault tolerance."""

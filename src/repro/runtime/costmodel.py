@@ -1,54 +1,18 @@
-"""Roofline cost model: hardware profiles + latency estimation.
+"""LM roofline cost model (§Roofline) — NOT part of the Moby path.
 
-Two uses:
-1. §Roofline — derive the three roofline terms (compute / memory /
-   collective) for the TPU v5e target from the dry-run's compiled artifact.
-2. Paper reproduction — the edge/cloud latency figures (Fig. 2/3/13) are
-   produced from calibrated device profiles, since this container has no
-   Jetson TX2 / RTX 2080Ti / 4G link. Profiles are calibrated so the four
-   3D detectors match the paper's measured TX2 latencies, then reused for
-   every downstream figure (documented in DESIGN.md §3).
+Derives the three roofline terms (compute / memory / collective) for the
+TPU v5e target from the dry-run's compiled artifact, plus the napkin-math
+FLOP/byte helpers the LM dry-run cells need (``repro.launch.dryrun``,
+``benchmarks.roofline``). Everything the *Moby reproduction* models —
+device profiles, detector latencies, on-board component times — lives in
+:mod:`repro.runtime.profiles`; this module only consumes
+:class:`~repro.runtime.profiles.DeviceProfile` for its roofline terms.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
 
-
-@dataclasses.dataclass(frozen=True)
-class DeviceProfile:
-    name: str
-    peak_flops: float        # FLOP/s (dense fp16/bf16 unless noted)
-    hbm_bw: float            # bytes/s
-    link_bw: float = 0.0     # bytes/s per ICI/interconnect link
-    # Empirical sustained efficiency for irregular workloads (conv/point
-    # nets rarely exceed ~30-50% of peak on edge parts).
-    efficiency: float = 0.35
-    fixed_overhead_s: float = 0.004
-
-
-# TPU v5e — the assignment's target numbers.
-TPU_V5E = DeviceProfile(name="tpu_v5e", peak_flops=197e12, hbm_bw=819e9,
-                        link_bw=50e9, efficiency=0.55,
-                        fixed_overhead_s=0.0)
-
-# Jetson TX2: 256-core Pascal, ~1.33 TFLOP/s fp16, 58.3 GB/s LPDDR4.
-JETSON_TX2 = DeviceProfile(name="jetson_tx2", peak_flops=1.33e12,
-                           hbm_bw=58.3e9, efficiency=0.30,
-                           fixed_overhead_s=0.010)
-
-# RTX 2080 Ti: ~26.9 TFLOP/s fp16 (tensor ~107), 616 GB/s GDDR6.
-RTX_2080TI = DeviceProfile(name="rtx_2080ti", peak_flops=26.9e12,
-                           hbm_bw=616e9, efficiency=0.40,
-                           fixed_overhead_s=0.003)
-
-
-def roofline_latency(profile: DeviceProfile, flops: float, bytes_moved: float
-                     ) -> float:
-    """max(compute, memory) + fixed overhead, with sustained efficiency."""
-    t_c = flops / (profile.peak_flops * profile.efficiency)
-    t_m = bytes_moved / profile.hbm_bw
-    return max(t_c, t_m) + profile.fixed_overhead_s
+from repro.runtime.profiles import DeviceProfile, TPU_V5E
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,7 +46,7 @@ def roofline_terms(flops: float, hbm_bytes: float, coll_bytes: float,
 
 
 # ---------------------------------------------------------------------------
-# Model FLOPs (6*N*D rule and detector profiles)
+# Model FLOPs (6*N*D rule) — LM dry-run helpers
 # ---------------------------------------------------------------------------
 
 
@@ -139,50 +103,3 @@ def analytic_cell_cost(cfg, shape: dict, n_params: int, n_active: int,
         flops += 4.0 * b * s * h * hd * attn_layers
         hbm = param_bytes_per_chip + 2 * state_bytes_per_chip
     return {"flops_per_chip": flops / chips, "hbm_bytes_per_chip": hbm}
-
-
-# Published per-frame inference GFLOPs (KITTI-scale inputs) for the paper's
-# models; used only by the latency *reproduction* figures.
-DETECTOR_GFLOPS: Dict[str, float] = {
-    "pointpillar": 64.0,
-    "second": 76.9,
-    "pointrcnn": 27.4,      # point ops — low FLOPs, latency dominated by
-    "pv_rcnn": 89.0,        # irregular memory access (handled by per-model
-    "complex_yolo": 15.5,   # efficiency below)
-    "frustum_convnet": 24.0,
-    "monodle": 27.0,
-    "deep3dbox": 42.0,
-    "pseudo_lidar_pp": 120.0,
-    "yolov5n": 7.7,         # seg variants at 1242x375-ish input
-    "yolov5s": 26.4,
-    "yolov5m": 78.9,
-    "yolov5l": 147.7,
-}
-
-# Per-model sustained-efficiency fudge factors calibrated so TX2 latencies
-# match the paper's measurements (Fig. 2: PointPillar 293 ms, SECOND 677 ms,
-# 912 ms mean across the four models; YOLOv5n 33 ms, YOLOv5l ~62 % of
-# PointPillar; §5.2.2: Deep3DBox 2834 ms, Pseudo-LiDAR++ 5889 ms).
-# Two-stage point-based models are gather/memory-bound, hence tiny values.
-DETECTOR_EFFICIENCY: Dict[str, float] = {
-    "pointpillar": 0.170,
-    "second": 0.087,
-    "pointrcnn": 0.023,
-    "pv_rcnn": 0.038,
-    "complex_yolo": 0.050,
-    "frustum_convnet": 0.077,
-    "monodle": 0.053,
-    "deep3dbox": 0.0112,
-    "pseudo_lidar_pp": 0.0153,
-    "yolov5n": 0.250,
-    "yolov5s": 0.440,
-    "yolov5m": 0.590,
-    "yolov5l": 0.645,
-}
-
-
-def detector_latency(model: str, device: DeviceProfile) -> float:
-    """Inference latency (s) of a named detector on a device profile."""
-    flops = DETECTOR_GFLOPS[model] * 1e9
-    eff = DETECTOR_EFFICIENCY[model]
-    return flops / (device.peak_flops * eff) + device.fixed_overhead_s

@@ -71,6 +71,13 @@ class NetworkSim:
     def advance(self, seconds: float):
         self.t += seconds
 
+    def current_bw_mbps(self, n_sharers: int = 1) -> float:
+        """The fair-share uplink bandwidth (Mbps) the trace delivers at the
+        current wall time — the observed-bandwidth telemetry engines feed
+        the adaptive scheduler."""
+        i = int(self.t / self.dt) % len(self.trace)
+        return float(self.trace[i]) / max(int(n_sharers), 1)
+
     def transfer_time(self, n_bytes: int, start_t: float = None, *,
                       n_sharers: int = 1) -> float:
         """Seconds to push n_bytes starting at start_t (default: now).

@@ -1,33 +1,28 @@
-"""Shared serving-layer pieces: wire sizes, calibrated component times, the
-on-board latency model, and the canonical :class:`RunReport` — used by the
-single-stream ``MobyEngine``, the batched multi-stream ``FleetEngine``
-(repro.fleet) and the ``repro.api`` facade."""
+"""Shared serving-layer pieces: wire sizes, the on-board latency model,
+modeled per-frame cost estimates (scheduler telemetry), and the canonical
+:class:`RunReport` — used by the single-stream ``MobyEngine``, the batched
+multi-stream ``FleetEngine`` (repro.fleet) and the ``repro.api`` facade.
+
+``ComponentTimes`` itself lives in :mod:`repro.runtime.profiles` (the
+single modeled-latency source, derived per device profile); it is
+re-exported here for the serving-layer consumers.
+"""
 from __future__ import annotations
 
 import csv
 import dataclasses
 import io
-from typing import Dict, Iterable, List, Sequence, Union
+from typing import Dict, Iterable, List, Sequence, Tuple, Union
 
 import numpy as np
+
+from repro.runtime import profiles
+from repro.runtime.profiles import ComponentTimes  # noqa: F401 (re-export)
 
 # Wire size of one LiDAR frame: the paper measures 6.96 Mbit/file average
 # (KITTI scans cropped to the camera FOV).
 PC_BYTES = int(6.96e6 / 8)
 RESULT_BYTES = 64 * 7 * 4  # detections back to the edge
-
-
-@dataclasses.dataclass(frozen=True)
-class ComponentTimes:
-    """Calibrated on-board component times (TX2), seconds. Derived from
-    Fig. 15 / Table 4 as documented in benchmarks/fig15_breakdown.py."""
-    seg_2d: float = 0.033          # YOLOv5n instance segmentation
-    point_proj: float = 0.0127
-    filtration: float = 0.00201
-    bbox_est_assoc: float = 0.023
-    bbox_est_new: float = 0.0407   # two-hypothesis path (no prior)
-    tba: float = 0.00514
-    fos: float = 0.0006
 
 
 def onboard_transform_time(comp: ComponentTimes, n_assoc: float, n_new: float,
@@ -46,6 +41,40 @@ def onboard_transform_time(comp: ComponentTimes, n_assoc: float, n_new: float,
     if use_fos:
         t += comp.fos
     return t
+
+
+def nominal_transform_time(comp: ComponentTimes, use_tba: bool,
+                           use_fos: bool) -> float:
+    """Modeled cost of a *typical* transform frame (all detections carry a
+    track prior) — the per-frame edge-cost estimate the adaptive scheduler
+    compares against the offload cost."""
+    return onboard_transform_time(comp, n_assoc=1, n_new=0,
+                                  use_tba=use_tba, use_fos=use_fos)
+
+
+def modeled_frame_costs(comp: ComponentTimes, detector: str,
+                        bw_mbps: float, rtt_s: float, use_tba: bool,
+                        charge_fos: bool, *, onboard_anchors: bool = False,
+                        edge_device="jetson_tx2",
+                        cloud_device="rtx_2080ti") -> Tuple[float, float]:
+    """(edge_cost_s, offload_cost_s) for one frame from the active device
+    profiles and the currently observed uplink bandwidth — the modeled
+    costs engines feed into ``scheduler.observe_telemetry`` each frame.
+
+    The offload cost is the anchor round-trip estimate: frame upload +
+    result download at the observed fair-share bandwidth (plus per-leg
+    RTT) and cloud inference on the cloud profile; with
+    ``onboard_anchors`` (the ``moby_onboard`` mode) it is edge inference
+    on the edge profile instead.
+    """
+    edge = nominal_transform_time(comp, use_tba, charge_fos)
+    if onboard_anchors:
+        return edge, profiles.detector_latency(detector, edge_device)
+    bw = max(float(bw_mbps), 1e-3)
+    wire_s = (PC_BYTES + RESULT_BYTES) * 8 / 1e6 / bw
+    offload = 2 * rtt_s + wire_s + \
+        profiles.detector_latency(detector, cloud_device)
+    return edge, offload
 
 
 # ---------------------------------------------------------------------------
@@ -67,7 +96,7 @@ class FrameRecord:
 
 
 _CSV_FIELDS = ("stream", "frame", "kind", "latency_s", "onboard_s", "f1",
-               "precision", "recall")
+               "precision", "recall", "scenario", "policy")
 
 
 @dataclasses.dataclass
@@ -142,6 +171,13 @@ class RunReport:
     def anchor_rate(self) -> float:
         return float(np.mean(self.is_anchor))
 
+    @property
+    def offload_rate(self) -> float:
+        """Fraction of frames that sent anything to the cloud (anchor
+        round-trips *and* test-frame uploads) — the x-axis of the
+        accuracy/offload frontier the policy sweep plots."""
+        return float(np.mean(self.is_anchor | self.send_test))
+
     # -- per-stream record views ----------------------------------------
     def kinds(self, s: int = 0) -> List[str]:
         return [str(k) for k in self.kind[s]]
@@ -176,6 +212,7 @@ class RunReport:
             "mean_f1": self.mean_f1,
             "mean_anchor_latency_s": self.mean_anchor_latency,
             "anchor_rate": self.anchor_rate,
+            "offload_rate": self.offload_rate,
         }
 
     def to_rows(self) -> Iterable[Dict[str, Union[str, float, int]]]:
@@ -186,14 +223,18 @@ class RunReport:
                        "onboard_s": float(self.onboard_s[s, t]),
                        "f1": float(self.f1[s, t]),
                        "precision": float(self.precision[s, t]),
-                       "recall": float(self.recall[s, t])}
+                       "recall": float(self.recall[s, t]),
+                       "scenario": self.scenario, "policy": self.policy}
 
-    def to_csv(self, file=None) -> str:
-        """Write per-frame rows as CSV to ``file`` (path or file object);
-        returns the CSV text."""
+    def to_csv(self, file=None, header: bool = True) -> str:
+        """Write per-frame rows (with scenario/policy provenance columns)
+        as CSV to ``file`` (path or file object); returns the CSV text.
+        ``header=False`` lets the sweep harness concatenate many reports
+        into one CSV."""
         buf = io.StringIO()
         w = csv.DictWriter(buf, fieldnames=_CSV_FIELDS)
-        w.writeheader()
+        if header:
+            w.writeheader()
         for row in self.to_rows():
             w.writerow(row)
         text = buf.getvalue()

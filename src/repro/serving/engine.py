@@ -27,10 +27,11 @@ import numpy as np
 
 from repro.core import metrics, projection, scheduler, transform
 from repro.data import scenes
-from repro.runtime import costmodel, netsim
+from repro.runtime import netsim, profiles
 from repro.serving import tape as tape_lib
 from repro.serving.common import (PC_BYTES, RESULT_BYTES, ComponentTimes,
                                   FrameRecord, RunReport,
+                                  modeled_frame_costs,
                                   onboard_transform_time)
 
 
@@ -52,13 +53,6 @@ def _frame_stats(boxes3d, valid, gt_boxes, gt_visible, det_to_track):
                       n_valid.astype(jnp.float32)])
 
 
-# Deprecation shim (one PR): run outcomes are now the canonical
-# serving.common.RunReport — same aggregates, ``.records`` as a property.
-# The alias keeps type annotations and isinstance checks working; build
-# instances with ``RunReport.from_records``.
-RunResult = RunReport
-
-
 class MobyEngine:
     def __init__(self, scene_cfg: scenes.SceneConfig, detector: str,
                  trace: str = "belgium2", mode: str = "moby",
@@ -66,15 +60,20 @@ class MobyEngine:
                  tparams: Optional[transform.TransformParams] = None,
                  sparams: Optional[scheduler.SchedulerParams] = None,
                  seed: int = 0,
-                 comp: ComponentTimes = ComponentTimes(),
+                 comp: Optional[ComponentTimes] = None,
                  tape: Optional[tape_lib.FrameTape] = None,
-                 backend: Optional[str] = None):
+                 backend: Optional[str] = None,
+                 device: str = "jetson_tx2"):
         self.cfg = scene_cfg
         self.detector = detector
         self.mode = mode
         self.use_fos = use_fos
         self.use_tba = use_tba
-        self.comp = comp
+        # The edge device profile is the single modeled-latency source:
+        # component times (unless explicitly overridden) and edge
+        # inference both come from it (runtime.profiles).
+        self.profile = profiles.get_profile(device)
+        self.comp = comp or profiles.component_times(self.profile)
         self.net = netsim.NetworkSim(trace, seed=seed)
         self.stream = scenes.SceneStream(scene_cfg, seed=seed)
         self.calib = projection.Calibration(
@@ -107,17 +106,32 @@ class MobyEngine:
     # ------------------------------------------------------------------
     def _cloud_roundtrip(self) -> float:
         tx = self.net.transfer_time(PC_BYTES)
-        infer = costmodel.detector_latency(self.detector,
-                                           costmodel.RTX_2080TI)
+        infer = profiles.detector_latency(self.detector,
+                                          profiles.RTX_2080TI)
         back = self.net.transfer_time(RESULT_BYTES)
         return tx + infer + back
 
     def _edge_infer(self) -> float:
-        return costmodel.detector_latency(self.detector, costmodel.JETSON_TX2)
+        return profiles.detector_latency(self.detector, self.profile)
 
     def _onboard_transform_time(self, n_assoc: int, n_new: int) -> float:
         return onboard_transform_time(self.comp, n_assoc, n_new,
                                       self.use_tba, self._charge_fos)
+
+    def _observe_telemetry(self,
+                           sstate: scheduler.SchedulerState
+                           ) -> scheduler.SchedulerState:
+        """Per-frame telemetry for cost-aware policies: the bandwidth the
+        netsim currently delivers plus modeled edge/offload frame costs
+        from the active device profiles."""
+        bw = self.net.current_bw_mbps()
+        edge, off = modeled_frame_costs(
+            self.comp, self.detector, bw, self.net.rtt_s, self.use_tba,
+            self._charge_fos, onboard_anchors=self.mode == "moby_onboard",
+            edge_device=self.profile)
+        return scheduler.observe_telemetry(sstate, bw_mbps=bw,
+                                           edge_cost_s=edge,
+                                           offload_cost_s=off)
 
     # ------------------------------------------------------------------
     def run(self, n_frames: int) -> RunReport:
@@ -161,8 +175,11 @@ class MobyEngine:
         for t in range(n_frames):
             tf = self.tape.frame(t) if self.tape is not None else None
             frame = next(frame_iter) if frame_iter is not None else None
-            actions = scheduler.scheduler_pre(sstate, self.sparams) if \
-                self.use_fos else scheduler.SchedulerActions(
+            if self.use_fos:
+                sstate = self._observe_telemetry(sstate)
+                actions = scheduler.scheduler_pre(sstate, self.sparams)
+            else:
+                actions = scheduler.SchedulerActions(
                     jnp.bool_(False), jnp.bool_(t == 0))
             is_anchor = bool(actions.run_as_anchor)
             send_test = bool(actions.send_test) and self.use_fos

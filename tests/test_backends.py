@@ -46,8 +46,12 @@ class TestRegistry:
         # Env overrides the platform default; explicit overrides env.
         monkeypatch.setenv("MOBY_BACKEND", "pallas")
         assert ops.resolve_backend(None) == "pallas"
-        assert ops.resolve_backend("auto") == "pallas"
+        assert ops.resolve_backend("") == "pallas"
         assert ops.resolve_backend("ref") == "ref"
+        # "auto" is the per-op autotuned mode, resolved by get_impl.
+        assert ops.resolve_backend("auto") == "auto"
+        monkeypatch.setenv("MOBY_BACKEND", "auto")
+        assert ops.resolve_backend(None) == "auto"
 
     def test_unknown_backend_rejected(self, monkeypatch):
         with pytest.raises(ValueError, match="unknown backend"):
