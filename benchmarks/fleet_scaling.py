@@ -10,7 +10,10 @@ that extends Moby beyond the paper's single vehicle. For S in {1, 4, 16,
 * mean anchor latency — shared-uplink fair-sharing plus cloud-batcher
   queueing make anchors slower for everyone as the fleet grows;
 * a dispatch-overhead reference: the single-stream Python-loop MobyEngine
-  on the same tape (~3 jit calls + a stats fetch per frame).
+  on the same tape (~3 jit calls + a stats fetch per frame);
+* a heterogeneity grid — S x device-mix x cloud-GPU-pool: per-device-class
+  p95 modeled latency (Orin-class streams should beat TX2-class ones) and
+  anchor latency vs pool size (queueing relief as G grows).
 """
 from __future__ import annotations
 
@@ -18,12 +21,22 @@ import time
 
 from benchmarks.common import emit, make_session
 from repro import api
+from repro.fleet import CloudBatcherConfig
 from repro.serving import engine as engine_lib
 from repro.serving import tape as tape_lib
 
 S_LIST = (1, 4, 16, 64)
 FRAMES = 24
 REPEATS = 3
+
+# Heterogeneity grid: device mixes x cloud pool sizes at a fixed S.
+HET_S = 16
+MIXES = {
+    "tx2": "jetson_tx2",
+    "mixed-75-25": {"jetson_tx2": 0.75, "jetson_orin": 0.25},
+    "orin": "jetson_orin",
+}
+G_LIST = (1, 4)
 
 # Lean scene so per-frame device work is dispatch/overhead-bound — the
 # regime fleet batching targets (full-size scenes are exercised by
@@ -67,6 +80,29 @@ def run() -> None:
     emit("fleet_scaling/moby_python_loop_per_frame_ms",
          round(1e3 * best / FRAMES, 3),
          "seed engine: ~3 dispatches + sync per stream-frame")
+
+    run_heterogeneity()
+
+
+def run_heterogeneity() -> None:
+    """S x device-mix x G: the per-stream profile vector and the cloud
+    GPU pool, swept together (scan mode; adaptive policy so the
+    per-stream offload budget is live). max_batch=4 makes the S=16
+    anchor rounds span several chunks, so the pool actually queues."""
+    for mix_name, spec in MIXES.items():
+        for g in G_LIST:
+            sess = make_session(
+                "smoke", n_streams=HET_S, seed=3, policy="adaptive",
+                device=spec, cloud=CloudBatcherConfig(n_gpus=g, max_batch=4),
+                **LEAN)
+            rep = sess.run(FRAMES, scan=True)
+            tag = f"fleet_scaling/het/S{HET_S}/{mix_name}/G{g}"
+            emit(f"{tag}/mean_anchor_latency_ms",
+                 round(1e3 * rep.mean_anchor_latency, 1),
+                 "non-increasing in G (pool relieves the cloud queue)")
+            for dev, p95 in sorted(rep.device_p95_latency().items()):
+                emit(f"{tag}/p95_latency_ms/{dev}", round(1e3 * p95, 2),
+                     "per-device-class modeled tail")
 
 
 if __name__ == "__main__":

@@ -9,10 +9,14 @@ row per (scenario, policy) cell.
 
     PYTHONPATH=src python -m benchmarks.sweep [--out sweep.csv]
         [--frames 32] [--scenarios A B ...] [--policies X Y ...] [--smoke]
+        [--fleet]
 
 ``--smoke`` is the CI entry point: one lean scenario, two policies, a
-handful of frames. Also registered in ``benchmarks.run`` (module name
-``sweep``) with a small default grid.
+handful of frames. ``--fleet`` sweeps the fleet presets (S=16 congested,
+S=64 heterogeneous) in single-dispatch scan mode and emits per-device
+p95 modeled latency beside the per-frame CSV rows (whose ``device``
+column carries each stream's profile). Also registered in
+``benchmarks.run`` (module name ``sweep``) with a small default grid.
 """
 from __future__ import annotations
 
@@ -28,20 +32,25 @@ from repro import api
 SCENARIOS = ("kitti-urban", "sparse-lidar", "dense-traffic", "lossy-uplink")
 POLICIES = ("fos", "periodic(4)", "periodic(8)", "adaptive")
 
+# Fleet grid (--fleet): S x device-mix x GPU-pool, scan mode.
+FLEET_SCENARIOS = ("fleet-16-congested", "fleet-64-mixed")
+FLEET_POLICIES = ("fos", "adaptive")
+
 
 def sweep(scenarios: Sequence[str] = SCENARIOS,
           policies: Sequence[str] = POLICIES, frames: int = 32,
-          seed: int = 0, out: Optional[str] = None
+          seed: int = 0, out: Optional[str] = None, scan: bool = False
           ) -> Tuple[str, List[Dict]]:
     """Run the grid; returns (csv_text, per-cell summary dicts) and
-    optionally writes the CSV to ``out``."""
+    optionally writes the CSV to ``out``. ``scan=True`` serves each cell
+    through the fleet's single-dispatch ``lax.scan`` mode (fleet grids)."""
     parts: List[str] = []
     summaries: List[Dict] = []
     for scn_name in scenarios:
         for policy in policies:
             sess = api.Session(api.scenario(scn_name, policy=policy,
                                             seed=seed))
-            rep = sess.run(frames)
+            rep = sess.run(frames, scan=scan)
             parts.append(rep.to_csv(header=not parts))
             s = rep.summary()
             summaries.append(s)
@@ -51,6 +60,13 @@ def sweep(scenarios: Sequence[str] = SCENARIOS,
                  round(s["offload_rate"], 4))
             emit(f"sweep/{scn_name}/{policy}/mean_latency_ms",
                  round(s["mean_latency_s"] * 1e3, 2))
+            if rep.device is not None and len(set(rep.device)) > 1:
+                # Heterogeneous fleet: the per-stream tail by device class
+                # (slow streams should anchor on their own cadence, not
+                # drag the fast class with them).
+                for dev, p95 in sorted(rep.device_p95_latency().items()):
+                    emit(f"sweep/{scn_name}/{policy}/p95_latency_ms/{dev}",
+                         round(p95 * 1e3, 2))
     for scn_name in scenarios:
         cells = {s["policy"]: s for s in summaries
                  if s["scenario"] == scn_name}
@@ -86,11 +102,18 @@ def main() -> None:
     ap.add_argument("--policies", nargs="*", default=list(POLICIES))
     ap.add_argument("--smoke", action="store_true",
                     help="CI smoke: lean scenario, two policies, 8 frames")
+    ap.add_argument("--fleet", action="store_true",
+                    help="fleet grid: congested + heterogeneous presets, "
+                         "scan mode, per-device p95 emits")
     args = ap.parse_args()
     print("name,value,derived")
     if args.smoke:
         text, _ = sweep(scenarios=("smoke",), policies=("fos", "adaptive"),
                         frames=8, seed=args.seed, out=args.out)
+    elif args.fleet:
+        text, _ = sweep(scenarios=FLEET_SCENARIOS, policies=FLEET_POLICIES,
+                        frames=args.frames, seed=args.seed,
+                        out=args.out, scan=True)
     else:
         text, _ = sweep(scenarios=args.scenarios, policies=args.policies,
                         frames=args.frames, seed=args.seed, out=args.out)

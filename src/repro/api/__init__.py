@@ -20,22 +20,27 @@ One stable surface for every scale, speed and scenario-diversity change::
   ``never_anchor``, ``adaptive``) are resolved through
   ``repro.core.scheduler``'s policy registry — re-exported here so
   callers can enumerate/extend the slot;
-* device profiles (``jetson_tx2``, ``rtx_2080ti``, ``tpu_v5e``) are
-  resolved through ``repro.runtime.profiles``' registry — the
-  ``Scenario.device`` slot — re-exported likewise.
+* device profiles (``jetson_tx2``, ``jetson_orin``, ``rtx_2080ti``,
+  ``tpu_v5e``) are resolved through ``repro.runtime.profiles``' registry —
+  the ``Scenario.device`` slot — re-exported likewise. ``Scenario.device``
+  also takes a per-stream list or a mix spec (``{"jetson_tx2": 0.75,
+  "jetson_orin": 0.25}``) for heterogeneous fleets, stacked into a
+  :class:`ProfileVector` inside the fleet engine.
 """
 from repro.api.scenario import (Scenario, list_scenarios, register_scenario,
                                 scenario)
 from repro.api.session import Session
 from repro.core.scheduler import (SchedulerPolicy, get_policy, list_policies,
                                   register_policy)
-from repro.runtime.profiles import (DeviceProfile, get_profile,
-                                    list_profiles, register_profile)
+from repro.runtime.profiles import (DeviceProfile, ProfileVector, get_profile,
+                                    list_profiles, profile_vector,
+                                    register_profile, resolve_stream_devices)
 from repro.serving.common import FrameRecord, RunReport
 
 __all__ = [
-    "DeviceProfile", "FrameRecord", "RunReport", "Scenario",
+    "DeviceProfile", "FrameRecord", "ProfileVector", "RunReport", "Scenario",
     "SchedulerPolicy", "Session", "get_policy", "get_profile",
-    "list_policies", "list_profiles", "list_scenarios", "register_policy",
-    "register_profile", "register_scenario", "scenario",
+    "list_policies", "list_profiles", "list_scenarios", "profile_vector",
+    "register_policy", "register_profile", "register_scenario",
+    "resolve_stream_devices", "scenario",
 ]

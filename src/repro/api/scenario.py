@@ -50,14 +50,23 @@ class Scenario:
     cloud: Optional[cloud_lib.CloudBatcherConfig] = None
     backend: Optional[str] = None      # ops backend: "ref"/"pallas"/
                                        # "auto" (per-op)/None=env default
-    device: str = "jetson_tx2"         # edge device-profile slot
-                                       # (runtime.profiles registry)
+    # Edge device slot (runtime.profiles registry). A profile name fleets
+    # every stream on that device; heterogeneous fleets pass a list of S
+    # names or a mix spec like {"jetson_tx2": 0.75, "jetson_orin": 0.25}
+    # (resolved deterministically — see profiles.resolve_stream_devices).
+    device: profiles.DeviceSpec = "jetson_tx2"
     seed: int = 0
 
     def device_profile(self) -> profiles.DeviceProfile:
-        """The effective edge device profile (validated against the
-        profile registry — unknown names raise KeyError listing it)."""
-        return profiles.get_profile(self.device)
+        """The effective edge device profile of stream 0 (validated
+        against the profile registry — unknown names raise KeyError
+        listing it). Heterogeneous fleets read :meth:`stream_devices`."""
+        return profiles.get_profile(self.stream_devices()[0])
+
+    def stream_devices(self) -> tuple:
+        """The per-stream device names this scenario resolves to (length
+        ``n_streams``; validates every name against the registry)."""
+        return profiles.resolve_stream_devices(self.device, self.n_streams)
 
     def scheduler_params(self) -> scheduler.SchedulerParams:
         """The effective SchedulerParams: explicit ``sparams`` plus the
@@ -172,3 +181,24 @@ register_scenario("fleet-16-congested", lambda: Scenario(
     scene=_lean_scene(n_points=2048, img_h=64, img_w=208, max_obj=8,
                       density_scale=8000.0),
     n_streams=16, trace="fcc1"))
+
+# Heterogeneous 64-vehicle fleet: 3/4 TX2-class, 1/4 Orin-class edges
+# sharing one cell and a 4-GPU cloud pool (ultra-lean frames keep the
+# vmapped step cheap at S=64).
+register_scenario("fleet-64-mixed", lambda: Scenario(
+    name="fleet-64-mixed",
+    scene=_lean_scene(n_points=512, img_h=32, img_w=104,
+                      density_scale=2500.0),
+    n_streams=64, trace="belgium2",
+    device={"jetson_tx2": 0.75, "jetson_orin": 0.25},
+    cloud=cloud_lib.CloudBatcherConfig(n_gpus=4)))
+
+# 256 streams on a degraded cell: the congested extreme of the fleet
+# family — even an 8-GPU pool queues, and the shared uplink dominates.
+register_scenario("fleet-256-congested", lambda: Scenario(
+    name="fleet-256-congested",
+    scene=_lean_scene(n_points=256, img_h=32, img_w=104, max_obj=4,
+                      mean_objects=2, density_scale=1500.0),
+    n_streams=256, trace="fcc1",
+    device={"jetson_tx2": 0.5, "jetson_orin": 0.5},
+    cloud=cloud_lib.CloudBatcherConfig(n_gpus=8)))

@@ -33,30 +33,36 @@ class Session:
             scn = _scenario(scn)
         self.scenario = scn
         sparams = scn.scheduler_params()
-        scn.device_profile()            # fail fast on unknown devices
+        devices = scn.stream_devices()  # fail fast on unknown devices
         if scn.n_streams < 1:
             raise ValueError(f"n_streams must be >= 1, got {scn.n_streams}")
         self._scan_engine = None
         # Baselines (edge_only/cloud_only) are single-stream notions — a
         # fleet preset's baseline comparison runs on one stream rather
         # than rejecting the mode (FleetEngine serves moby modes only).
+        # Single-stream engines run on stream 0's resolved device (the
+        # mix spec's first class).
         if scn.n_streams == 1 or scn.mode in ("edge_only", "cloud_only"):
             self.engine = MobyEngine(
                 scn.scene, scn.detector, trace=scn.trace, mode=scn.mode,
                 use_fos=scn.use_fos, use_tba=scn.use_tba,
                 tparams=scn.tparams, sparams=sparams, seed=scn.seed,
-                comp=scn.comp, backend=scn.backend, device=scn.device)
+                comp=scn.comp, backend=scn.backend, device=devices[0])
         else:
             self.engine = self._scan_engine = self._fleet(scn.n_streams)
 
     def _fleet(self, n_streams: int) -> FleetEngine:
         scn = self.scenario
+        # A lazily built S=1 slice of a fleet scenario keeps stream 0's
+        # resolved device; full-size fleets pass the spec through.
+        device = scn.device if n_streams == scn.n_streams \
+            else list(scn.stream_devices()[:n_streams])
         return FleetEngine(
             scn.scene, scn.detector, n_streams=n_streams, trace=scn.trace,
             mode=scn.mode, use_fos=scn.use_fos, use_tba=scn.use_tba,
             tparams=scn.tparams, sparams=scn.scheduler_params(),
             seed=scn.seed, comp=scn.comp,
-            cloud_cfg=scn.cloud, backend=scn.backend, device=scn.device)
+            cloud_cfg=scn.cloud, backend=scn.backend, device=device)
 
     @property
     def n_streams(self) -> int:

@@ -32,6 +32,11 @@ string in ``TransformParams``). Registered policies:
 test-error EWMA it maintains itself, plus the observed uplink bandwidth
 and the modeled edge/offload frame costs the engines fold in per frame
 through :func:`observe_telemetry` (pure, so it composes with vmap/scan).
+In a heterogeneous fleet the engines feed *per-stream* cost vectors from
+the stacked device profiles, so the adaptive policy's offload-cost budget
+is per stream: a slow TX2-class stream sees a high relative edge cost and
+anchors eagerly, while an Orin-class stream on the same cell tolerates
+more drift — each on its own cadence.
 
 The state machine itself is jit-compatible; the asynchronous transport
 (when test results arrive) is driven by the engine/netsim, which feeds

@@ -7,10 +7,17 @@ host, where the network/cloud clocks live:
 * **Shared uplink** — all of a frame's anchor/test uploads split one cell's
   trace bandwidth (runtime.netsim.SharedUplink), so transfer times degrade
   with fleet size;
-* **Cloud batcher** — the round's requests are batched on one cloud GPU
-  (fleet.cloud.CloudBatcher): per-item inference amortizes, queueing delay
-  grows — the frame-offloading schedulers of different vehicles now
-  interact through anchor latency.
+* **Cloud batcher** — the round's requests are batched round-robin onto a
+  pool of cloud GPUs (fleet.cloud.CloudBatcher): per-item inference
+  amortizes, queueing delay grows (and relaxes with pool size) — the
+  frame-offloading schedulers of different vehicles now interact through
+  anchor latency.
+
+Streams may run on *heterogeneous edge hardware*: ``device`` accepts a
+profile name, a per-stream list, or a mix spec, stacked into a
+``profiles.ProfileVector`` — per-stream component times, edge inference
+and scheduler cost telemetry (a uniform vector reproduces the scalar
+``device=`` path bitwise; tests/test_heterogeneity.py).
 
 Two run modes:
 
@@ -41,10 +48,12 @@ from repro.serving.common import (PC_BYTES, RESULT_BYTES, ComponentTimes,
                                   onboard_transform_time)
 
 
-def report_from_packed(packed_sf: np.ndarray) -> RunReport:
+def report_from_packed(packed_sf: np.ndarray,
+                       devices: Optional[Sequence[str]] = None) -> RunReport:
     """Build a RunReport from a (S, F, COL_ONBOARD+1) packed stats array
     (the scheduler's anchor/test bits are mutually exclusive, so the kind
-    string per frame is lossless)."""
+    string per frame is lossless). ``devices`` stamps the per-stream
+    device-profile names onto the report."""
     p = packed_sf
     is_anchor = p[:, :, step_lib.COL_IS_ANCHOR] > 0.5
     send_test = p[:, :, step_lib.COL_SEND_TEST] > 0.5
@@ -55,7 +64,9 @@ def report_from_packed(packed_sf: np.ndarray) -> RunReport:
                      onboard_s=p[:, :, step_lib.COL_ONBOARD],
                      f1=p[:, :, step_lib.COL_F1],
                      precision=p[:, :, step_lib.COL_PRECISION],
-                     recall=p[:, :, step_lib.COL_RECALL])
+                     recall=p[:, :, step_lib.COL_RECALL],
+                     device=None if devices is None
+                     else np.asarray(list(devices)))
 
 
 class FleetEngine:
@@ -68,7 +79,8 @@ class FleetEngine:
                  tapes: Optional[Sequence[tape_lib.FrameTape]] = None,
                  cloud_cfg: Optional[cloud_lib.CloudBatcherConfig] = None,
                  backend: Optional[str] = None,
-                 device: str = "jetson_tx2"):
+                 device: profiles.DeviceSpec = "jetson_tx2",
+                 stream_seeds: Optional[Sequence[int]] = None):
         if mode not in ("moby", "moby_onboard"):
             raise ValueError(f"FleetEngine serves moby modes, got {mode!r}")
         self.cfg = scene_cfg
@@ -78,11 +90,24 @@ class FleetEngine:
         self.mode = mode
         self.use_fos = use_fos
         self.use_tba = use_tba
-        # Edge device profile: modeled component times + edge inference
-        # (runtime.profiles; the cloud side stays on the 2080Ti profile).
-        self.profile = profiles.get_profile(device)
-        self.comp = comp or profiles.component_times(self.profile)
+        # Edge device profiles, one per stream (runtime.profiles): a name,
+        # an S-list, or a mix spec resolve to a ProfileVector — modeled
+        # component times, edge inference and scheduler telemetry are all
+        # per-stream. The cloud side stays on the 2080Ti profile.
+        self.pvec = profiles.profile_vector(device, n_streams)
+        self.stream_devices = self.pvec.names
+        # Stacked (S,)-field component model for the scan/telemetry paths
+        # (an explicitly passed scalar `comp` broadcasts to every stream),
+        # plus per-stream scalar slices for the host loop.
+        self.comp = comp or profiles.component_times_vector(self.pvec)
+        self.comps = [profiles.component_slice(self.comp, s)
+                      for s in range(n_streams)]
         self.seed = seed
+        if stream_seeds is not None and len(stream_seeds) != n_streams:
+            raise ValueError(f"got {len(stream_seeds)} stream seeds for "
+                             f"{n_streams} streams")
+        self.stream_seeds = None if stream_seeds is None \
+            else tuple(int(s) for s in stream_seeds)
         self.frame_dt = scene_cfg.dt
         base = tparams or transform.TransformParams()
         # Ops backend threaded to every vmapped stream step via the static
@@ -101,8 +126,12 @@ class FleetEngine:
             height=scene_cfg.img_h, width=scene_cfg.img_w)
         self.uplink = netsim.SharedUplink(trace, seed=seed)
         infer = profiles.detector_latency(detector, profiles.RTX_2080TI)
-        self.cloud_cfg = cloud_cfg or cloud_lib.CloudBatcherConfig(
-            infer_s=infer)
+        cc = cloud_cfg or cloud_lib.CloudBatcherConfig()
+        if cc.infer_s is None:
+            # Fill the detector-derived per-frame latency (presets set
+            # n_gpus/window without knowing the detector).
+            cc = cloud_lib.replace_config(cc, infer_s=infer)
+        self.cloud_cfg = cc
         self.batcher = cloud_lib.CloudBatcher(self.cloud_cfg)
         self._given_tapes = list(tapes) if tapes is not None else None
         self._stack: Optional[tape_lib.FrameTape] = None
@@ -129,19 +158,23 @@ class FleetEngine:
             self._stack = tape_lib.stack_tapes(tapes)
         return tape_lib.FrameTape(*(a[:, :n_frames] for a in self._stack))
 
-    def _edge_infer(self) -> float:
-        return profiles.detector_latency(self.detector, self.profile)
+    def _edge_infer(self) -> np.ndarray:
+        """(S,) per-stream edge inference latency from the profile vector."""
+        return np.asarray(
+            profiles.detector_latency(self.detector, self.pvec), np.float64)
 
     def _observe_telemetry(self,
                            state: step_lib.FleetState) -> step_lib.FleetState:
         """Per-frame telemetry for cost-aware policies: every stream of
         the fleet shares the cell, so each observes its fair share of the
-        current trace bandwidth."""
+        current trace bandwidth; edge/offload costs are per-stream vectors
+        from the profile vector (slow streams see their own frame cost, so
+        the adaptive budget anchors them on their own cadence)."""
         bw = self.uplink.current_bw_mbps(n_sharers=self.n_streams)
         edge, off = modeled_frame_costs(
             self.comp, self.detector, bw, self.uplink.rtt_s, self.use_tba,
             self._charge_fos, onboard_anchors=self.mode == "moby_onboard",
-            edge_device=self.profile)
+            edge_device=self.pvec)
         sched = scheduler.observe_telemetry(state.sched, bw_mbps=bw,
                                             edge_cost_s=edge,
                                             offload_cost_s=off)
@@ -163,7 +196,8 @@ class FleetEngine:
         frame for all S streams; byte-accurate shared-uplink/cloud timing."""
         stack = self._stacked(n_frames)
         s_n = self.n_streams
-        state = step_lib.init_fleet_state(s_n, self.cfg.max_obj)
+        state = self._init_state()
+        edge_inf = self._edge_infer()   # (S,), frame-invariant
         walls = np.zeros(s_n)
         inflight_at = np.full(s_n, np.inf)
         self.uplink.reset()
@@ -202,13 +236,13 @@ class FleetEngine:
             onb = np.zeros(s_n)
             for s in range(s_n):
                 if is_anchor[s]:
-                    lat[s] = self._edge_infer() \
+                    lat[s] = edge_inf[s] \
                         if self.mode == "moby_onboard" else roundtrip[s]
                 else:
                     n_assoc = int(pk[s, step_lib.COL_N_ASSOC])
                     n_new = max(int(pk[s, step_lib.COL_N_VALID]) - n_assoc, 0)
                     onb[s] = onboard_transform_time(
-                        self.comp, n_assoc, n_new, self.use_tba,
+                        self.comps[s], n_assoc, n_new, self.use_tba,
                         self._charge_fos)
                     lat[s] = onb[s]
                 if send_test[s]:
@@ -220,17 +254,20 @@ class FleetEngine:
             walls += np.where(is_anchor, np.maximum(self.frame_dt, lat),
                               self.frame_dt)
             self.uplink.advance(self.frame_dt)
-        return report_from_packed(out)
+        return report_from_packed(out, devices=self.stream_devices)
 
     # ------------------------------------------------------------------
+    def _init_state(self) -> step_lib.FleetState:
+        return step_lib.init_fleet_state(self.n_streams, self.cfg.max_obj,
+                                         stream_seeds=self.stream_seeds)
+
     def run_scan(self, n_frames: int) -> RunReport:
         """Benchmark mode: the whole fleet run is ONE ``lax.scan`` dispatch,
         with the network/cloud model evaluated on device."""
         state, outs = self._scan_fn()(
-            step_lib.init_fleet_state(self.n_streams, self.cfg.max_obj),
-            self._scan_inputs(n_frames), n_frames)
+            self._init_state(), self._scan_inputs(n_frames), n_frames)
         packed = np.asarray(outs).transpose(1, 0, 2)   # (F,S,C) -> (S,F,C)
-        return report_from_packed(packed)
+        return report_from_packed(packed, devices=self.stream_devices)
 
     def _scan_inputs(self, n_frames: int) -> step_lib.FrameInputs:
         stack = self._stacked(n_frames)
@@ -248,6 +285,13 @@ class FleetEngine:
     def _scan_fn(self):
         if self._scan_cache is not None:
             return self._scan_cache
+        if self.cloud_cfg.window_s is not None:
+            # The scan twin batches whole rounds; silently dropping a
+            # configured batch window would let run()/run_scan() diverge
+            # without warning (ROADMAP: model the window on device).
+            raise ValueError(
+                "CloudBatcherConfig.window_s is not modeled in scan mode; "
+                "use FleetEngine.run() for batch-window configs")
         net = step_lib.ScanNetParams(
             bw_mbps=jnp.asarray(netsim.synthesize_trace(self.trace,
                                                         seed=self.seed),
@@ -257,7 +301,8 @@ class FleetEngine:
             result_mbits=RESULT_BYTES * 8 / 1e6,
             infer_s=self.cloud_cfg.infer_s,
             marginal=self.cloud_cfg.marginal,
-            max_batch=self.cloud_cfg.max_batch)
+            max_batch=self.cloud_cfg.max_batch,
+            n_gpus=self.cloud_cfg.n_gpus)
         self._scan_cache = step_lib.make_fleet_scan(
             self.n_streams, self.calib, self.tparams, self.sparams,
             self.comp, net, self.use_fos,

@@ -63,10 +63,20 @@ class FleetState(NamedTuple):
 
 
 def init_fleet_state(n_streams: int, max_obj: int,
-                     key_base: int = 0) -> FleetState:
+                     key_base: int = 0, stream_seeds=None) -> FleetState:
     """Stream i's PRNG seed is ``key_base + i`` so stream 0 of a fleet
-    matches a single-stream engine seeded with ``key_base`` (parity)."""
-    keys = jax.vmap(jax.random.key)(key_base + jnp.arange(n_streams))
+    matches a single-stream engine seeded with ``key_base`` (parity).
+    ``stream_seeds`` (length-S ints) overrides the per-stream seeds —
+    relabeling streams (tape, device, seed together) then permutes the
+    fleet exactly (tests/test_heterogeneity.py)."""
+    if stream_seeds is None:
+        seeds = key_base + jnp.arange(n_streams)
+    else:
+        if len(stream_seeds) != n_streams:
+            raise ValueError(f"got {len(stream_seeds)} stream seeds for "
+                             f"{n_streams} streams")
+        seeds = jnp.asarray(stream_seeds, jnp.int32)
+    keys = jax.vmap(jax.random.key)(seeds)
     moby = jax.vmap(lambda k: transform.init_state(2 * max_obj, k))(keys)
     sched = scheduler.init_scheduler_fleet(n_streams, max_obj)
     return FleetState(
@@ -151,6 +161,7 @@ class ScanNetParams(NamedTuple):
     infer_s: float             # cloud detector, batch of 1
     marginal: float            # marginal batch cost (CloudBatcherConfig)
     max_batch: int             # detector batch-size ceiling (chunks beyond)
+    n_gpus: int = 1            # cloud GPU pool size (CloudBatcherConfig)
 
 
 def make_fleet_scan(n_streams: int, calib, params, sparams,
@@ -177,7 +188,7 @@ def make_fleet_scan(n_streams: int, calib, params, sparams,
     edge_cost_s = nominal_transform_time(comp, params.use_tba, charge_fos)
 
     def body(carry, xs):
-        state, walls, inflight_at, busy = carry
+        state, walls, inflight_at, busy, rr = carry
         t, inp = xs
         test_arrived = walls >= inflight_at
         net_t = t.astype(jnp.float32) * net.frame_dt
@@ -211,16 +222,38 @@ def make_fleet_scan(n_streams: int, calib, params, sparams,
         up = net.rtt_s + net.pc_mbits / share
         down = net.rtt_s + net.result_mbits / share
 
-        # Cloud batcher: the round's requests are served on one server,
-        # chunked at max_batch like CloudBatcher (approximation: every
-        # request completes with the round's last chunk).
-        start = jnp.maximum(busy, net_t + up)
+        # Cloud batcher: the round's requests are chunked at max_batch like
+        # CloudBatcher (approximation: every request completes with the
+        # round's last chunk). With a G-GPU pool the chunks spread evenly
+        # over per-GPU queues, each serving its share serially — the
+        # on-device twin of CloudBatcher's round-robin dispatch.
         n_req = jnp.maximum(n_up, 1).astype(jnp.float32)
         b_eff = jnp.minimum(n_req, float(net.max_batch))
         n_chunks = jnp.ceil(n_req / float(net.max_batch))
-        infer_b = n_chunks * net.infer_s * (1.0 + net.marginal * (b_eff - 1))
-        done = start + infer_b
-        busy = jnp.where(n_up > 0, done, busy)
+        if net.n_gpus == 1:
+            start = jnp.maximum(busy, net_t + up)
+            infer_b = n_chunks * net.infer_s \
+                * (1.0 + net.marginal * (b_eff - 1))
+            done = start + infer_b
+            busy = jnp.where(n_up > 0, done, busy)
+        else:
+            # Chunk j of the round goes to GPU (rr + j) % G — the rotating
+            # round-robin pointer persists across rounds (like
+            # CloudBatcher._rr), so consecutive 1-chunk rounds still
+            # spread over the pool instead of re-queueing on GPU 0.
+            chunk_s = net.infer_s * (1.0 + net.marginal * (b_eff - 1))
+            n_chunks_i = n_chunks.astype(jnp.int32)
+            g = jnp.arange(net.n_gpus, dtype=jnp.int32)
+            base = n_chunks_i // net.n_gpus
+            extra = n_chunks_i - base * net.n_gpus
+            n_g = (base + (jnp.mod(g - rr, net.n_gpus) < extra)) \
+                .astype(jnp.float32)                              # (G,)
+            start_g = jnp.maximum(busy, net_t + up)
+            done_g = start_g + n_g * chunk_s
+            done = jnp.max(jnp.where(n_g > 0, done_g, -jnp.inf))
+            busy = jnp.where((n_g > 0) & (n_up > 0), done_g, busy)
+            rr = jnp.where(n_up > 0,
+                           jnp.mod(rr + n_chunks_i, net.n_gpus), rr)
         roundtrip = (done - net_t) + down
 
         n_assoc = packed[:, COL_N_ASSOC]
@@ -238,15 +271,18 @@ def make_fleet_scan(n_streams: int, calib, params, sparams,
                                   net.frame_dt)
         out = jnp.concatenate(
             [packed, latency[:, None], onboard[:, None]], axis=1)
-        return (state, walls, inflight_at, busy), out
+        return (state, walls, inflight_at, busy, rr), out
 
     def run(state, stacked: FrameInputs, n_frames: int):
+        busy0 = jnp.float32(0.0) if net.n_gpus == 1 \
+            else jnp.zeros((net.n_gpus,), jnp.float32)
         carry = (state,
                  jnp.zeros((n_streams,), jnp.float32),
                  jnp.full((n_streams,), jnp.inf, jnp.float32),
-                 jnp.float32(0.0))
+                 busy0,
+                 jnp.int32(0))       # round-robin GPU pointer (G > 1)
         ts = jnp.arange(n_frames, dtype=jnp.int32)
-        (state, _, _, _), outs = jax.lax.scan(body, carry, (ts, stacked))
+        (state, _, _, _, _), outs = jax.lax.scan(body, carry, (ts, stacked))
         return state, outs
 
     return jax.jit(run, static_argnames=("n_frames",))

@@ -17,15 +17,25 @@ policy in ``core/scheduler.py``):
   (tests, or measurements recorded on the real target host) or drop the
   cache. Resolution is deterministic given a pinned table — pin *before*
   tracing, because resolved impls are baked into jit caches.
+* :func:`save_measurements` / :func:`load_measurements` — persist the
+  table as per-host JSON keyed by (platform, jax version); stale keys are
+  rejected on load so a TPU-measured table never silently drives a CPU
+  host (or a jax upgrade). Set ``MOBY_AUTOTUNE_CACHE=/path.json`` to make
+  :func:`measurement_table` read/write that file automatically — CI and
+  laptops then skip the startup micro-benchmark after the first run.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import Callable, Dict, Optional, Tuple
 
 import numpy as np
 
 from repro.ops import registry
+
+_CACHE_ENV = "MOBY_AUTOTUNE_CACHE"
 
 # Best-of-k timing; the shapes are tiny so the whole table costs well
 # under a second per backend on CPU (interpret-mode pallas included).
@@ -93,9 +103,14 @@ def measure_op(name: str, backend: str, args: tuple,
 def measurement_table(force: bool = False) -> Dict[str, Dict[str, float]]:
     """The per-op measured-latency table ``{op: {backend: seconds}}`` for
     this host, measured lazily on first use and cached for the process.
-    ``force=True`` re-measures (unless a table was pinned)."""
+    ``force=True`` re-measures (unless a table was pinned). With
+    ``MOBY_AUTOTUNE_CACHE`` set, a key-matching JSON table is loaded
+    instead of measuring, and a fresh measurement is saved back."""
     global _TABLE
     if _TABLE is not None and (_PINNED or not force):
+        return _TABLE
+    cache = os.environ.get(_CACHE_ENV, "").strip()
+    if cache and not force and load_measurements(cache):
         return _TABLE
     import repro.ops.api  # noqa: F401  (ensure ops are registered)
 
@@ -106,6 +121,8 @@ def measurement_table(force: bool = False) -> Dict[str, Dict[str, float]]:
         table[name] = {be: measure_op(name, be, args)
                        for be in registry.BACKENDS}
     _TABLE = table
+    if cache:
+        save_measurements(cache)
     return _TABLE
 
 
@@ -124,6 +141,63 @@ def clear_measurements() -> None:
     global _TABLE, _PINNED
     _TABLE = None
     _PINNED = False
+
+
+# ---------------------------------------------------------------------------
+# Persisted tables (per-host JSON, keyed by platform + jax version)
+# ---------------------------------------------------------------------------
+
+
+def cache_key() -> Dict[str, str]:
+    """The host key a persisted table is valid for: accelerator platform
+    (cpu/gpu/tpu) + jax version. Either changing invalidates every row —
+    interpret-mode pallas times say nothing about a real TPU, and kernel
+    lowering changes across jax releases."""
+    import jax
+
+    return {"platform": jax.default_backend(), "jax": jax.__version__}
+
+
+def save_measurements(path: str) -> None:
+    """Persist the current table (measuring it first if needed) as JSON
+    under this host's :func:`cache_key`."""
+    table = measurement_table()
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump({"key": cache_key(), "table": table}, f, indent=1,
+                  sort_keys=True)
+
+
+def load_measurements(path: str, strict: bool = False) -> bool:
+    """Load and pin a persisted table if its key matches this host.
+
+    Returns True when the table was adopted. A missing/unreadable file or
+    a stale key (different platform or jax version) is rejected: returns
+    False, or raises ValueError with the mismatch when ``strict``.
+    """
+    try:
+        with open(path) as f:
+            blob = json.load(f)
+    except (OSError, ValueError) as e:
+        if strict:
+            raise ValueError(f"autotune cache {path!r} unreadable: {e}")
+        return False
+    key, want = blob.get("key"), cache_key()
+    if key != want:
+        if strict:
+            raise ValueError(f"autotune cache {path!r} is stale: saved for "
+                             f"{key}, this host is {want}")
+        return False
+    table = blob.get("table")
+    if not isinstance(table, dict) or not table:
+        if strict:
+            raise ValueError(f"autotune cache {path!r} holds no table")
+        return False
+    set_measurements({op: {be: float(t) for be, t in row.items()}
+                      for op, row in table.items()})
+    return True
 
 
 def best_backend(name: str) -> str:

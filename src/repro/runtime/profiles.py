@@ -27,7 +27,9 @@ that used to share a module with these (``lm_train_flops``,
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Union
+from typing import Dict, Mapping, Sequence, Tuple, Union
+
+import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,6 +60,13 @@ JETSON_TX2 = DeviceProfile(name="jetson_tx2", peak_flops=1.33e12,
 RTX_2080TI = DeviceProfile(name="rtx_2080ti", peak_flops=26.9e12,
                            hbm_bw=616e9, efficiency=0.40,
                            fixed_overhead_s=0.003)
+
+# Jetson AGX Orin: 2048-core Ampere, ~10.6 TFLOP/s fp16 (GPU, MAXN),
+# 204.8 GB/s LPDDR5 — the Orin-class edge device of mixed fleets (~8x the
+# TX2's sustained throughput at a similar sustained-efficiency point).
+JETSON_ORIN = DeviceProfile(name="jetson_orin", peak_flops=10.6e12,
+                            hbm_bw=204.8e9, efficiency=0.32,
+                            fixed_overhead_s=0.006)
 
 # TPU v5e — the Pallas kernel target.
 TPU_V5E = DeviceProfile(name="tpu_v5e", peak_flops=197e12, hbm_bw=819e9,
@@ -96,8 +105,125 @@ def get_profile(device: Union[str, DeviceProfile]) -> DeviceProfile:
 
 
 register_profile(JETSON_TX2, "tx2")
+register_profile(JETSON_ORIN, "orin")
 register_profile(RTX_2080TI, "2080ti")
 register_profile(TPU_V5E, "v5e")
+
+
+# ---------------------------------------------------------------------------
+# Per-stream profile vectors (heterogeneous fleets)
+# ---------------------------------------------------------------------------
+
+# A device spec, as Scenario.device accepts it: one profile name (or
+# profile) for the whole fleet, an explicit per-stream list of S names, or
+# a named mix {"jetson_tx2": 0.75, "jetson_orin": 0.25} resolved onto S
+# streams deterministically.
+DeviceSpec = Union[str, DeviceProfile, Sequence[Union[str, DeviceProfile]],
+                   Mapping[str, float]]
+
+
+def _stream_profiles(spec: DeviceSpec,
+                     n_streams: int) -> Tuple[DeviceProfile, ...]:
+    """Resolve a device spec to per-stream profiles. Profile *instances*
+    pass through as-is (registered or not, matching the scalar engine
+    path); names go through the registry (KeyError lists it)."""
+    if isinstance(spec, (str, DeviceProfile)):
+        return (get_profile(spec),) * n_streams
+    if isinstance(spec, Mapping):
+        if not spec:
+            raise ValueError("empty device mix spec")
+        by_name: Dict[str, DeviceProfile] = {}
+        fracs: Dict[str, float] = {}
+        for d, w in spec.items():   # aliases accumulate onto one profile
+            p = get_profile(d)
+            if float(w) < 0:
+                raise ValueError(
+                    f"device mix weight for {p.name!r} is negative: {w!r}")
+            by_name[p.name] = p
+            fracs[p.name] = fracs.get(p.name, 0.0) + float(w)
+        total = sum(fracs.values())
+        if total <= 0:
+            raise ValueError(f"device mix weights must sum > 0: {spec!r}")
+        exact = {d: w / total * n_streams for d, w in fracs.items()}
+        counts = {d: int(e) for d, e in exact.items()}
+        # Largest remainder, ties broken by mapping order (stable sort).
+        rest = sorted(exact, key=lambda d: exact[d] - counts[d],
+                      reverse=True)
+        for d in rest[:n_streams - sum(counts.values())]:
+            counts[d] += 1
+        out = tuple(by_name[d] for d in fracs for _ in range(counts[d]))
+        assert len(out) == n_streams, (spec, n_streams, counts)
+        return out
+    profs = tuple(get_profile(d) for d in spec)
+    if len(profs) != n_streams:
+        raise ValueError(f"device list names {len(profs)} streams, "
+                         f"fleet has {n_streams}")
+    return profs
+
+
+def resolve_stream_devices(spec: DeviceSpec, n_streams: int
+                           ) -> Tuple[str, ...]:
+    """Resolve a device spec to the per-stream tuple of S profile names.
+
+    * a name / profile        -> that device on every stream;
+    * a sequence of S entries -> per-stream assignment, verbatim;
+    * a fraction mapping      -> largest-remainder proportional counts
+      (weights must be non-negative), assigned in contiguous blocks
+      following the mapping's iteration order (deterministic: no RNG, so
+      a mix spec is reproducible and stream `i`'s device never depends
+      on the seed).
+
+    Names are validated against the registry (KeyError lists the
+    registered profiles); :class:`DeviceProfile` instances pass through.
+    """
+    return tuple(p.name for p in _stream_profiles(spec, n_streams))
+
+
+@dataclasses.dataclass(frozen=True)
+class ProfileVector:
+    """S device profiles stacked into per-stream arrays (float64, so the
+    modeled-latency arithmetic is elementwise-identical to the scalar
+    :class:`DeviceProfile` path — a uniform vector reproduces the scalar
+    results bitwise). The arrays are plain numpy: usable directly inside
+    jitted / ``lax.scan`` steps, where they enter the trace as constants.
+    """
+    profiles: Tuple[DeviceProfile, ...]
+    names: Tuple[str, ...]
+    peak_flops: np.ndarray       # (S,) float64
+    hbm_bw: np.ndarray           # (S,)
+    efficiency: np.ndarray       # (S,)
+    fixed_overhead_s: np.ndarray  # (S,)
+
+    @property
+    def n_streams(self) -> int:
+        return len(self.names)
+
+    @property
+    def effective_flops(self) -> np.ndarray:
+        """Sustained FLOP/s per stream."""
+        return self.peak_flops * self.efficiency
+
+    def __getitem__(self, s: int) -> DeviceProfile:
+        """Stream ``s``'s profile."""
+        return self.profiles[s]
+
+
+def profile_vector(spec: DeviceSpec, n_streams: int) -> ProfileVector:
+    """Resolve a device spec (name / per-stream list / mix mapping — see
+    :func:`resolve_stream_devices`) into a stacked :class:`ProfileVector`.
+    Unregistered :class:`DeviceProfile` instances are accepted, matching
+    the scalar ``get_profile`` pass-through."""
+    profs = _stream_profiles(spec, n_streams)
+
+    def col(attr):
+        return np.asarray([getattr(p, attr) for p in profs], np.float64)
+
+    return ProfileVector(profiles=profs,
+                         names=tuple(p.name for p in profs),
+                         peak_flops=col("peak_flops"),
+                         hbm_bw=col("hbm_bw"),
+                         efficiency=col("efficiency"),
+                         fixed_overhead_s=col("fixed_overhead_s"))
 
 
 # ---------------------------------------------------------------------------
@@ -162,9 +288,13 @@ DETECTOR_EFFICIENCY: Dict[str, float] = {
 
 
 def detector_latency(model: str,
-                     device: Union[str, DeviceProfile]) -> float:
-    """Inference latency (s) of a named detector on a device profile."""
-    profile = get_profile(device)
+                     device: Union[str, DeviceProfile, ProfileVector]
+                     ) -> Union[float, np.ndarray]:
+    """Inference latency (s) of a named detector on a device profile.
+    A :class:`ProfileVector` yields the per-stream (S,) latency array
+    (float64 — elementwise the same arithmetic as the scalar path)."""
+    profile = device if isinstance(device, ProfileVector) \
+        else get_profile(device)
     flops = DETECTOR_GFLOPS[model] * 1e9
     eff = DETECTOR_EFFICIENCY[model]
     return flops / (profile.peak_flops * eff) + profile.fixed_overhead_s
@@ -202,4 +332,33 @@ def component_times(device: Union[str, DeviceProfile]) -> ComponentTimes:
     base = ComponentTimes()
     return ComponentTimes(**{
         f.name: getattr(base, f.name) * scale
+        for f in dataclasses.fields(ComponentTimes)})
+
+
+def component_times_vector(pvec: ProfileVector) -> ComponentTimes:
+    """Per-stream component model: a :class:`ComponentTimes` whose fields
+    are (S,) float64 arrays — the TX2 calibration scaled per stream.
+
+    The float64 numpy arithmetic is elementwise identical to the scalar
+    :func:`component_times` path (python floats are 64-bit), so a uniform
+    fleet reproduces the scalar model bitwise; inside jitted steps the
+    arrays enter the trace as constants and broadcast against the
+    per-stream detection counts.
+    """
+    scale = JETSON_TX2.effective_flops / pvec.effective_flops   # (S,) f64
+    base = ComponentTimes()
+    return ComponentTimes(**{
+        f.name: getattr(base, f.name) * scale
+        for f in dataclasses.fields(ComponentTimes)})
+
+
+def component_slice(comp: ComponentTimes, s: int) -> ComponentTimes:
+    """Stream ``s``'s scalar :class:`ComponentTimes` out of a stacked
+    per-stream one (scalar fields pass through unchanged)."""
+    def pick(v):
+        return float(np.asarray(v).reshape(-1)[s]) \
+            if np.ndim(v) else float(v)
+
+    return ComponentTimes(**{
+        f.name: pick(getattr(comp, f.name))
         for f in dataclasses.fields(ComponentTimes)})

@@ -12,7 +12,7 @@ from __future__ import annotations
 import csv
 import dataclasses
 import io
-from typing import Dict, Iterable, List, Sequence, Tuple, Union
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -61,6 +61,11 @@ def modeled_frame_costs(comp: ComponentTimes, detector: str,
     profiles and the currently observed uplink bandwidth — the modeled
     costs engines feed into ``scheduler.observe_telemetry`` each frame.
 
+    Heterogeneous fleets pass a stacked per-stream ``comp`` and a
+    ``profiles.ProfileVector`` as ``edge_device``: both costs then come
+    back as (S,) arrays, so each stream's scheduler budget reflects its
+    own device.
+
     The offload cost is the anchor round-trip estimate: frame upload +
     result download at the observed fair-share bandwidth (plus per-leg
     RTT) and cloud inference on the cloud profile; with
@@ -96,7 +101,7 @@ class FrameRecord:
 
 
 _CSV_FIELDS = ("stream", "frame", "kind", "latency_s", "onboard_s", "f1",
-               "precision", "recall", "scenario", "policy")
+               "precision", "recall", "scenario", "policy", "device")
 
 
 @dataclasses.dataclass
@@ -117,11 +122,15 @@ class RunReport:
     recall: np.ndarray      # (S, F)
     scenario: str = ""      # provenance (repro.api fills these in)
     policy: str = ""
+    # Per-stream edge device-profile names, shape (S,) (None when the run
+    # predates device stamping — exported as an empty CSV column then).
+    device: Optional[np.ndarray] = None
 
     # -- construction ---------------------------------------------------
     @classmethod
     def from_records(cls, records: Sequence[FrameRecord], *,
-                     scenario: str = "", policy: str = "") -> "RunReport":
+                     scenario: str = "", policy: str = "",
+                     device: str = "") -> "RunReport":
         """Build a single-stream (1, F) report from FrameRecords."""
         def col(name, dtype=np.float32):
             return np.asarray([getattr(r, name) for r in records],
@@ -129,7 +138,8 @@ class RunReport:
         return cls(kind=col("kind", dtype="<U12"),
                    latency_s=col("latency_s"), onboard_s=col("onboard_s"),
                    f1=col("f1"), precision=col("precision"),
-                   recall=col("recall"), scenario=scenario, policy=policy)
+                   recall=col("recall"), scenario=scenario, policy=policy,
+                   device=np.asarray([device]) if device else None)
 
     # -- shape ----------------------------------------------------------
     @property
@@ -178,6 +188,27 @@ class RunReport:
         accuracy/offload frontier the policy sweep plots."""
         return float(np.mean(self.is_anchor | self.send_test))
 
+    # -- per-stream aggregates (heterogeneous fleets) --------------------
+    def stream_device(self, s: int) -> str:
+        """Stream ``s``'s edge device-profile name ("" when unstamped)."""
+        return str(self.device[s]) if self.device is not None else ""
+
+    def stream_p95_latency(self) -> np.ndarray:
+        """(S,) p95 of modeled end-to-end latency per stream — the
+        per-stream tail the heterogeneity sweeps compare across device
+        classes."""
+        return np.percentile(self.latency_s, 95, axis=1)
+
+    def device_p95_latency(self) -> Dict[str, float]:
+        """p95 modeled latency per device class: each stream's p95
+        averaged over the streams assigned that device (requires a
+        device-stamped report)."""
+        if self.device is None:
+            raise ValueError("report has no per-stream device names")
+        p95 = self.stream_p95_latency()
+        return {str(d): float(np.mean(p95[self.device == d]))
+                for d in sorted(set(str(x) for x in self.device))}
+
     # -- per-stream record views ----------------------------------------
     def kinds(self, s: int = 0) -> List[str]:
         return [str(k) for k in self.kind[s]]
@@ -211,6 +242,7 @@ class RunReport:
             "mean_onboard_s": self.mean_onboard,
             "mean_f1": self.mean_f1,
             "mean_anchor_latency_s": self.mean_anchor_latency,
+            "p95_latency_s": float(np.percentile(self.latency_s, 95)),
             "anchor_rate": self.anchor_rate,
             "offload_rate": self.offload_rate,
         }
@@ -224,7 +256,8 @@ class RunReport:
                        "f1": float(self.f1[s, t]),
                        "precision": float(self.precision[s, t]),
                        "recall": float(self.recall[s, t]),
-                       "scenario": self.scenario, "policy": self.policy}
+                       "scenario": self.scenario, "policy": self.policy,
+                       "device": self.stream_device(s)}
 
     def to_csv(self, file=None, header: bool = True) -> str:
         """Write per-frame rows (with scenario/policy provenance columns)

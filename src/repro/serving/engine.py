@@ -156,7 +156,7 @@ class MobyEngine:
                                     lat if self.mode == "edge_only" else 0.0,
                                     float(f1), float(p), float(r)))
             self.net.advance(self.frame_dt)
-        return RunReport.from_records(recs)
+        return RunReport.from_records(recs, device=self.profile.name)
 
     def _run_moby(self, n_frames: int) -> RunReport:
         recs: List[FrameRecord] = []
@@ -262,4 +262,4 @@ class MobyEngine:
             recs.append(FrameRecord(t, kind, latency, onboard, f1, p, r))
             wall += max(self.frame_dt, latency if is_anchor else 0.0)
             self.net.advance(self.frame_dt)
-        return RunReport.from_records(recs)
+        return RunReport.from_records(recs, device=self.profile.name)

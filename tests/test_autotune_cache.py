@@ -1,0 +1,90 @@
+"""Persisted autotune tables: save/load round-trip, stale-key rejection,
+and the MOBY_AUTOTUNE_CACHE wiring in measurement_table."""
+import json
+import os
+
+import pytest
+
+from repro.ops import autotune, registry
+
+
+@pytest.fixture(autouse=True)
+def _isolated_table():
+    """Pin a synthetic table so no test triggers the real startup
+    micro-benchmark, and always restore process state."""
+    saved_env = os.environ.pop("MOBY_AUTOTUNE_CACHE", None)
+    autotune.set_measurements({
+        "point_proj": {"ref": 1e-4, "pallas": 2e-4},
+        "iou2d": {"ref": 3e-4, "pallas": 1e-4},
+    })
+    yield
+    autotune.clear_measurements()
+    if saved_env is not None:
+        os.environ["MOBY_AUTOTUNE_CACHE"] = saved_env
+    else:
+        os.environ.pop("MOBY_AUTOTUNE_CACHE", None)
+
+
+def test_round_trip(tmp_path):
+    path = tmp_path / "cache" / "table.json"
+    autotune.save_measurements(str(path))
+    table = autotune.measurement_table()
+    autotune.clear_measurements()
+    autotune.set_measurements({"point_proj": {"ref": 9.0, "pallas": 9.0}})
+    assert autotune.load_measurements(str(path))
+    assert autotune.measurement_table() == table
+    # The loaded table is pinned: resolution is deterministic from it.
+    assert autotune.best_backend("point_proj") == "ref"
+    assert autotune.best_backend("iou2d") == "pallas"
+
+
+def test_stale_platform_rejected(tmp_path):
+    path = tmp_path / "table.json"
+    autotune.save_measurements(str(path))
+    blob = json.loads(path.read_text())
+    blob["key"]["platform"] = "tpu-from-another-host"
+    path.write_text(json.dumps(blob))
+    assert not autotune.load_measurements(str(path))
+    with pytest.raises(ValueError, match="stale"):
+        autotune.load_measurements(str(path), strict=True)
+
+
+def test_stale_jax_version_rejected(tmp_path):
+    path = tmp_path / "table.json"
+    autotune.save_measurements(str(path))
+    blob = json.loads(path.read_text())
+    blob["key"]["jax"] = "0.0.1"
+    path.write_text(json.dumps(blob))
+    assert not autotune.load_measurements(str(path))
+
+
+def test_missing_or_garbage_file(tmp_path):
+    assert not autotune.load_measurements(str(tmp_path / "nope.json"))
+    bad = tmp_path / "bad.json"
+    bad.write_text("{not json")
+    assert not autotune.load_measurements(str(bad))
+    with pytest.raises(ValueError, match="unreadable"):
+        autotune.load_measurements(str(bad), strict=True)
+    empty = tmp_path / "empty.json"
+    empty.write_text(json.dumps({"key": autotune.cache_key(), "table": {}}))
+    assert not autotune.load_measurements(str(empty))
+    with pytest.raises(ValueError, match="no table"):
+        autotune.load_measurements(str(empty), strict=True)
+
+
+def test_env_cache_adopted_by_measurement_table(tmp_path):
+    """MOBY_AUTOTUNE_CACHE: a key-matching file short-circuits the startup
+    micro-benchmark entirely."""
+    path = tmp_path / "host.json"
+    autotune.save_measurements(str(path))
+    want = autotune.measurement_table()
+    autotune.clear_measurements()
+    os.environ["MOBY_AUTOTUNE_CACHE"] = str(path)
+    assert autotune.measurement_table() == want
+    # "auto" resolution through the registry uses the adopted rows.
+    assert registry.get_impl("iou2d", "auto") is \
+        registry.get_impl("iou2d", "pallas")
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-v", "-x"])
