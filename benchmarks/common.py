@@ -15,6 +15,10 @@ ROWS = []
 # flags so scenario sweeps need no code edits.
 DEFAULT_SCENARIO = "kitti-urban"
 DEFAULT_POLICY = None
+# Harness-wide observability config (repro.obs.ObsConfig), set by the
+# --trace/--metrics/--audit flags; None = observability off (the default,
+# and the zero-overhead path).
+DEFAULT_OBS = None
 
 
 def emit(name: str, value, derived: str = ""):
@@ -59,6 +63,40 @@ def set_defaults(scenario: str | None = None, policy: str | None = None):
         DEFAULT_POLICY = policy
 
 
+def add_obs_args(ap):
+    """Shared --trace/--metrics/--audit flags (repro.obs). Each takes an
+    optional export path; the bare flag uses a default under ``obs/``.
+    Paths may contain {n}/{scenario}/{policy} placeholders."""
+    ap.add_argument("--trace", nargs="?", metavar="PATH", default=None,
+                    const="obs/trace-{n}-{scenario}-{policy}.json",
+                    help="write each run's virtual timeline as Chrome "
+                         "trace-event JSON (Perfetto-loadable)")
+    ap.add_argument("--metrics", nargs="?", metavar="PATH", default=None,
+                    const="obs/metrics.prom",
+                    help="write the Prometheus text exposition (runs "
+                         "accumulate into one process registry)")
+    ap.add_argument("--audit", nargs="?", metavar="PATH", default=None,
+                    const="obs/audit-{n}-{scenario}-{policy}.jsonl",
+                    help="write the per-frame scheduler decision audit "
+                         "(JSONL, or CSV if PATH ends in .csv)")
+    return ap
+
+
+def obs_from_args(args) -> api.ObsConfig | None:
+    """ObsConfig from the add_obs_args flags; None when all are off."""
+    if not (args.trace or args.metrics or args.audit):
+        return None
+    return api.ObsConfig(trace_path=args.trace, metrics_path=args.metrics,
+                         audit_path=args.audit)
+
+
+def set_obs(cfg: api.ObsConfig | None):
+    """Install the harness-wide observability config (make_session
+    threads it into every Session it builds)."""
+    global DEFAULT_OBS
+    DEFAULT_OBS = cfg
+
+
 def make_session(name: str | None = None, **overrides) -> api.Session:
     """The benchmark entry point onto the facade (replaces the seed's
     ``make_engine``, which silently dropped unknown scene kwargs): resolve
@@ -68,7 +106,8 @@ def make_session(name: str | None = None, **overrides) -> api.Session:
         # Ablation variants that disable the scheduler (use_fos=False)
         # stay policy-free; the rest of the sweep honours --policy.
         overrides.setdefault("policy", DEFAULT_POLICY)
-    return api.Session(api.scenario(name or DEFAULT_SCENARIO, **overrides))
+    return api.Session(api.scenario(name or DEFAULT_SCENARIO, **overrides),
+                       obs=DEFAULT_OBS)
 
 
 def small_scene(seed: int = 0, n_points: int = 8192, max_obj: int = 12

@@ -9,7 +9,7 @@ row per (scenario, policy) cell.
 
     PYTHONPATH=src python -m benchmarks.sweep [--out sweep.csv]
         [--frames 32] [--scenarios A B ...] [--policies X Y ...] [--smoke]
-        [--fleet]
+        [--fleet] [--trace [PATH]] [--metrics [PATH]] [--audit [PATH]]
 
 ``--smoke`` is the CI entry point: one lean scenario, two policies, a
 handful of frames. ``--fleet`` sweeps the fleet presets (S=16 congested,
@@ -39,17 +39,20 @@ FLEET_POLICIES = ("fos", "adaptive")
 
 def sweep(scenarios: Sequence[str] = SCENARIOS,
           policies: Sequence[str] = POLICIES, frames: int = 32,
-          seed: int = 0, out: Optional[str] = None, scan: bool = False
-          ) -> Tuple[str, List[Dict]]:
+          seed: int = 0, out: Optional[str] = None, scan: bool = False,
+          obs: Optional[api.ObsConfig] = None) -> Tuple[str, List[Dict]]:
     """Run the grid; returns (csv_text, per-cell summary dicts) and
     optionally writes the CSV to ``out``. ``scan=True`` serves each cell
-    through the fleet's single-dispatch ``lax.scan`` mode (fleet grids)."""
+    through the fleet's single-dispatch ``lax.scan`` mode (fleet grids).
+    ``obs`` turns on repro.obs for every cell — each run exports its own
+    trace/audit ({n}/{scenario}/{policy} path placeholders), metrics
+    accumulate across the grid into one exposition."""
     parts: List[str] = []
     summaries: List[Dict] = []
     for scn_name in scenarios:
         for policy in policies:
             sess = api.Session(api.scenario(scn_name, policy=policy,
-                                            seed=seed))
+                                            seed=seed), obs=obs)
             rep = sess.run(frames, scan=scan)
             parts.append(rep.to_csv(header=not parts))
             s = rep.summary()
@@ -105,18 +108,22 @@ def main() -> None:
     ap.add_argument("--fleet", action="store_true",
                     help="fleet grid: congested + heterogeneous presets, "
                          "scan mode, per-device p95 emits")
+    from benchmarks.common import add_obs_args, obs_from_args
+    add_obs_args(ap)
     args = ap.parse_args()
+    obs = obs_from_args(args)
     print("name,value,derived")
     if args.smoke:
         text, _ = sweep(scenarios=("smoke",), policies=("fos", "adaptive"),
-                        frames=8, seed=args.seed, out=args.out)
+                        frames=8, seed=args.seed, out=args.out, obs=obs)
     elif args.fleet:
         text, _ = sweep(scenarios=FLEET_SCENARIOS, policies=FLEET_POLICIES,
                         frames=args.frames, seed=args.seed,
-                        out=args.out, scan=True)
+                        out=args.out, scan=True, obs=obs)
     else:
         text, _ = sweep(scenarios=args.scenarios, policies=args.policies,
-                        frames=args.frames, seed=args.seed, out=args.out)
+                        frames=args.frames, seed=args.seed, out=args.out,
+                        obs=obs)
     n_rows = len(text.strip().splitlines()) - 1
     print(f"# sweep CSV: {n_rows} frame rows"
           + (f" -> {args.out}" if args.out else ""))

@@ -25,22 +25,27 @@ One stable surface for every scale, speed and scenario-diversity change::
   the ``Scenario.device`` slot — re-exported likewise. ``Scenario.device``
   also takes a per-stream list or a mix spec (``{"jetson_tx2": 0.75,
   "jetson_orin": 0.25}``) for heterogeneous fleets, stacked into a
-  :class:`ProfileVector` inside the fleet engine.
+  :class:`ProfileVector` inside the fleet engine;
+* observability (``repro.obs``) hangs off the same surface:
+  ``Session(scn, obs=ObsConfig(trace=True, metrics=True, audit=True))``
+  and the report grows ``to_trace`` / ``to_prometheus`` / ``to_audit``.
+  Off by default and provably free when off.
 """
 from repro.api.scenario import (Scenario, list_scenarios, register_scenario,
                                 scenario)
 from repro.api.session import Session
 from repro.core.scheduler import (SchedulerPolicy, get_policy, list_policies,
                                   register_policy)
+from repro.obs import ObsConfig
 from repro.runtime.profiles import (DeviceProfile, ProfileVector, get_profile,
                                     list_profiles, profile_vector,
                                     register_profile, resolve_stream_devices)
 from repro.serving.common import FrameRecord, RunReport
 
 __all__ = [
-    "DeviceProfile", "FrameRecord", "ProfileVector", "RunReport", "Scenario",
-    "SchedulerPolicy", "Session", "get_policy", "get_profile",
-    "list_policies", "list_profiles", "list_scenarios", "profile_vector",
-    "register_policy", "register_profile", "register_scenario",
-    "resolve_stream_devices", "scenario",
+    "DeviceProfile", "FrameRecord", "ObsConfig", "ProfileVector",
+    "RunReport", "Scenario", "SchedulerPolicy", "Session", "get_policy",
+    "get_profile", "list_policies", "list_profiles", "list_scenarios",
+    "profile_vector", "register_policy", "register_profile",
+    "register_scenario", "resolve_stream_devices", "scenario",
 ]

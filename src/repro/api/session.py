@@ -9,10 +9,11 @@ scenario/policy provenance stamped on it.
 """
 from __future__ import annotations
 
-from typing import Union
+from typing import Optional, Union
 
 from repro.api.scenario import Scenario, scenario as _scenario
 from repro.fleet.engine import FleetEngine
+from repro.obs import ObsConfig, export_artifacts
 from repro.serving.common import RunReport
 from repro.serving.engine import MobyEngine
 
@@ -28,10 +29,14 @@ class Session:
         report.mean_latency, report.anchor_rate, report.to_csv("out.csv")
     """
 
-    def __init__(self, scn: Union[Scenario, str]):
+    def __init__(self, scn: Union[Scenario, str],
+                 obs: Optional[ObsConfig] = None):
         if isinstance(scn, str):
             scn = _scenario(scn)
         self.scenario = scn
+        # Observability (repro.obs): off by default; threaded into the
+        # engine constructor, so every run of this session is observed.
+        self.obs = obs
         sparams = scn.scheduler_params()
         devices = scn.stream_devices()  # fail fast on unknown devices
         if scn.n_streams < 1:
@@ -47,7 +52,8 @@ class Session:
                 scn.scene, scn.detector, trace=scn.trace, mode=scn.mode,
                 use_fos=scn.use_fos, use_tba=scn.use_tba,
                 tparams=scn.tparams, sparams=sparams, seed=scn.seed,
-                comp=scn.comp, backend=scn.backend, device=devices[0])
+                comp=scn.comp, backend=scn.backend, device=devices[0],
+                obs=obs)
         else:
             self.engine = self._scan_engine = self._fleet(scn.n_streams)
 
@@ -62,7 +68,8 @@ class Session:
             mode=scn.mode, use_fos=scn.use_fos, use_tba=scn.use_tba,
             tparams=scn.tparams, sparams=scn.scheduler_params(),
             seed=scn.seed, comp=scn.comp,
-            cloud_cfg=scn.cloud, backend=scn.backend, device=device)
+            cloud_cfg=scn.cloud, backend=scn.backend, device=device,
+            obs=self.obs)
 
     @property
     def n_streams(self) -> int:
@@ -85,4 +92,10 @@ class Session:
         report.scenario = self.scenario.name
         report.policy = self.scenario.scheduler_params().policy \
             if self.scenario.use_fos else ""
+        # After the provenance stamp (so scenario/policy make it into the
+        # metric labels and path placeholders): flush this run into the
+        # registry and write whatever export paths the config names.
+        if report.obs is not None:
+            report.obs.flush_metrics(report)
+        export_artifacts(report, self.obs)
         return report

@@ -133,6 +133,18 @@ def observe_telemetry(state: SchedulerState, bw_mbps=None, edge_cost_s=None,
     return state._replace(**upd) if upd else state
 
 
+def decision_telemetry(state: SchedulerState) -> jnp.ndarray:
+    """The state-resident policy inputs an audit row needs, packed into
+    ONE small array — ``[err_ewma, frames_since_anchor]`` stacked on the
+    leading axis (scalar state -> (2,), fleet state -> (2, S)) — so the
+    repro.obs scheduler audit costs a single extra fetch per frame when
+    it is enabled (and none when it is not). The remaining audit inputs
+    (bw_mbps, edge/offload costs) are host-computed by the engines and
+    recorded before they reach :func:`observe_telemetry`."""
+    return jnp.stack([state.err_ewma,
+                      state.frames_since_anchor.astype(jnp.float32)])
+
+
 def init_scheduler_fleet(n_streams: int, max_obj: int) -> SchedulerState:
     """Batched scheduler state: one independent state machine per stream,
     stacked on a leading stream axis. The state machine is pure jnp, so

@@ -55,6 +55,11 @@ class CloudBatcher:
         if cfg.n_gpus < 1:
             raise ValueError(f"n_gpus must be >= 1, got {cfg.n_gpus}")
         self.cfg = cfg
+        # Optional observability sink (repro.obs.Observer): receives one
+        # on_cloud_batch(gpu, start, finish, batch, last_arrive) call per
+        # dispatched batch. None (the default) is a single pointer test
+        # per batch — the timing model itself never consults it.
+        self.sink = None
         self.reset()
 
     def reset(self) -> None:
@@ -108,12 +113,15 @@ class CloudBatcher:
         for chunk in self._batches(order, arrive_times):
             g = self._rr % self.cfg.n_gpus
             self._rr = (g + 1) % self.cfg.n_gpus
-            start = max(self.busy_until_g[g],
-                        max(arrive_times[i] for i in chunk))
+            last_arrive = max(arrive_times[i] for i in chunk)
+            start = max(self.busy_until_g[g], last_arrive)
             service = self.batch_infer_time(len(chunk))
             finish = start + service
             self.busy_until_g[g] = finish
             self.busy_s_g[g] += service
+            if self.sink is not None:
+                self.sink.on_cloud_batch(g, start, finish, len(chunk),
+                                         last_arrive)
             for i in chunk:
                 done[i] = finish
         return done

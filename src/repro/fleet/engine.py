@@ -31,6 +31,7 @@ the single-stream ``MobyEngine`` — enforced by tests/test_fleet.py.
 """
 from __future__ import annotations
 
+import contextlib
 from typing import Optional, Sequence
 
 import jax
@@ -41,11 +42,14 @@ from repro.core import projection, scheduler, transform
 from repro.data import scenes
 from repro.fleet import cloud as cloud_lib
 from repro.fleet import step as step_lib
+from repro.obs import observe as obs_lib
 from repro.runtime import netsim, profiles
 from repro.serving import tape as tape_lib
 from repro.serving.common import (PC_BYTES, RESULT_BYTES, ComponentTimes,
                                   RunReport, modeled_frame_costs,
                                   onboard_transform_time)
+
+_NULL_CTX = contextlib.nullcontext()
 
 
 def report_from_packed(packed_sf: np.ndarray,
@@ -80,7 +84,8 @@ class FleetEngine:
                  cloud_cfg: Optional[cloud_lib.CloudBatcherConfig] = None,
                  backend: Optional[str] = None,
                  device: profiles.DeviceSpec = "jetson_tx2",
-                 stream_seeds: Optional[Sequence[int]] = None):
+                 stream_seeds: Optional[Sequence[int]] = None,
+                 obs: Optional[obs_lib.ObsConfig] = None):
         if mode not in ("moby", "moby_onboard"):
             raise ValueError(f"FleetEngine serves moby modes, got {mode!r}")
         self.cfg = scene_cfg
@@ -133,6 +138,10 @@ class FleetEngine:
             cc = cloud_lib.replace_config(cc, infer_s=infer)
         self.cloud_cfg = cc
         self.batcher = cloud_lib.CloudBatcher(self.cloud_cfg)
+        # Observability config (repro.obs): None/all-off keeps every hook
+        # below a single pointer test — disabled runs are bitwise
+        # identical (tests/test_obs.py).
+        self.obs_config = obs
         self._given_tapes = list(tapes) if tapes is not None else None
         self._stack: Optional[tape_lib.FrameTape] = None
         self._scan_cache = None
@@ -163,18 +172,22 @@ class FleetEngine:
         return np.asarray(
             profiles.detector_latency(self.detector, self.pvec), np.float64)
 
-    def _observe_telemetry(self,
-                           state: step_lib.FleetState) -> step_lib.FleetState:
+    def _observe_telemetry(self, state: step_lib.FleetState,
+                           obs: Optional[obs_lib.Observer] = None
+                           ) -> step_lib.FleetState:
         """Per-frame telemetry for cost-aware policies: every stream of
         the fleet shares the cell, so each observes its fair share of the
         current trace bandwidth; edge/offload costs are per-stream vectors
         from the profile vector (slow streams see their own frame cost, so
-        the adaptive budget anchors them on their own cadence)."""
+        the adaptive budget anchors them on their own cadence). ``obs``
+        records the same host-computed values for the decision audit."""
         bw = self.uplink.current_bw_mbps(n_sharers=self.n_streams)
         edge, off = modeled_frame_costs(
             self.comp, self.detector, bw, self.uplink.rtt_s, self.use_tba,
             self._charge_fos, onboard_anchors=self.mode == "moby_onboard",
             edge_device=self.pvec)
+        if obs is not None:
+            obs.note_telemetry(bw, edge, off)
         sched = scheduler.observe_telemetry(state.sched, bw_mbps=bw,
                                             edge_cost_s=edge,
                                             offload_cost_s=off)
@@ -196,6 +209,12 @@ class FleetEngine:
         frame for all S streams; byte-accurate shared-uplink/cloud timing."""
         stack = self._stacked(n_frames)
         s_n = self.n_streams
+        obs = obs_lib.make_observer(
+            self.obs_config, n_streams=s_n, devices=self.stream_devices,
+            policy=self.sparams.policy if self.use_fos else "",
+            detector=self.detector, frame_dt=self.frame_dt)
+        want_audit = obs is not None and obs.cfg.want_audit
+        self.batcher.sink = obs
         state = self._init_state()
         edge_inf = self._edge_infer()   # (S,), frame-invariant
         walls = np.zeros(s_n)
@@ -208,10 +227,20 @@ class FleetEngine:
             inp = self._frame_inputs(stack, t)
             arrived = walls >= inflight_at
             if self.use_fos:
-                state = self._observe_telemetry(state)
-            state, packed = self._step(state, inp, jnp.asarray(arrived),
-                                       jnp.int32(t))
-            pk = np.asarray(packed)            # the one fetch per frame
+                state = self._observe_telemetry(state, obs)
+            if want_audit:
+                # The only obs-added fetch: the state-resident policy
+                # inputs at decision time (one small (2, S) array).
+                pre_tel = np.asarray(
+                    scheduler.decision_telemetry(state.sched))
+            with obs.measured_span("fleet/dispatch", jit_fn=self._step,
+                                   frame=t) if obs is not None \
+                    else _NULL_CTX:
+                state, packed = self._step(state, inp, jnp.asarray(arrived),
+                                           jnp.int32(t))
+            with obs.measured_span("fleet/fetch", frame=t) \
+                    if obs is not None else _NULL_CTX:
+                pk = np.asarray(packed)        # the one fetch per frame
             is_anchor = pk[:, step_lib.COL_IS_ANCHOR] > 0.5
             send_test = pk[:, step_lib.COL_SEND_TEST] > 0.5
             inflight_at[arrived] = np.inf
@@ -231,6 +260,17 @@ class FleetEngine:
                     [self.uplink.t + up] * n_up)
                 for j, s in enumerate(idxs):
                     roundtrip[s] = (done[j] - self.uplink.t) + down
+                if obs is not None:
+                    bd = self.uplink.transfer_breakdown(
+                        PC_BYTES, up, n_sharers=n_up)
+                    obs.record_uplink("up", self.uplink.t, up, n_up,
+                                      PC_BYTES, bd["eff_mbps"])
+                    bdd = self.uplink.transfer_breakdown(
+                        RESULT_BYTES, down, n_sharers=n_up)
+                    for d in sorted(set(done)):
+                        obs.record_uplink("down", d, down,
+                                          done.count(d), RESULT_BYTES,
+                                          bdd["eff_mbps"])
 
             lat = np.zeros(s_n)
             onb = np.zeros(s_n)
@@ -248,13 +288,22 @@ class FleetEngine:
                 if send_test[s]:
                     inflight_at[s] = walls[s] + roundtrip[s]
 
+            if want_audit:
+                kinds = np.where(is_anchor, "anchor",
+                                 np.where(send_test, "test", "transform"))
+                obs.audit_frame(t, kinds, pre_tel[0], pre_tel[1])
             out[:, t, :step_lib.N_COLS] = pk
             out[:, t, step_lib.COL_LATENCY] = lat
             out[:, t, step_lib.COL_ONBOARD] = onb
             walls += np.where(is_anchor, np.maximum(self.frame_dt, lat),
                               self.frame_dt)
             self.uplink.advance(self.frame_dt)
-        return report_from_packed(out, devices=self.stream_devices)
+        report = report_from_packed(out, devices=self.stream_devices)
+        report.frame_dt = self.frame_dt
+        if obs is not None:
+            self.batcher.sink = None
+            obs.finalize(report, busy_s_g=self.batcher.busy_s_g)
+        return report
 
     # ------------------------------------------------------------------
     def _init_state(self) -> step_lib.FleetState:
@@ -263,11 +312,36 @@ class FleetEngine:
 
     def run_scan(self, n_frames: int) -> RunReport:
         """Benchmark mode: the whole fleet run is ONE ``lax.scan`` dispatch,
-        with the network/cloud model evaluated on device."""
-        state, outs = self._scan_fn()(
-            self._init_state(), self._scan_inputs(n_frames), n_frames)
-        packed = np.asarray(outs).transpose(1, 0, 2)   # (F,S,C) -> (S,F,C)
-        return report_from_packed(packed, devices=self.stream_devices)
+        with the network/cloud model evaluated on device.
+
+        Observability: metrics and the (array-reconstructed) trace work;
+        the scheduler audit needs the orchestrated :meth:`run` — scan mode
+        keeps the telemetry on device, and auditing it would mean exactly
+        the per-frame fetches scan mode exists to avoid."""
+        obs = obs_lib.make_observer(
+            self.obs_config, n_streams=self.n_streams,
+            devices=self.stream_devices,
+            policy=self.sparams.policy if self.use_fos else "",
+            detector=self.detector, frame_dt=self.frame_dt)
+        if obs is not None and obs.cfg.want_audit:
+            raise ValueError(
+                "ObsConfig(audit=...) requires the orchestrated "
+                "FleetEngine.run(); scan mode keeps the scheduler "
+                "telemetry on device")
+        fn = self._scan_fn()
+        with obs.measured_span("fleet/scan_dispatch", jit_fn=fn,
+                               n_frames=n_frames) if obs is not None \
+                else _NULL_CTX:
+            state, outs = fn(
+                self._init_state(), self._scan_inputs(n_frames), n_frames)
+        with obs.measured_span("fleet/scan_fetch") if obs is not None \
+                else _NULL_CTX:
+            packed = np.asarray(outs).transpose(1, 0, 2)  # (F,S,C)->(S,F,C)
+        report = report_from_packed(packed, devices=self.stream_devices)
+        report.frame_dt = self.frame_dt
+        if obs is not None:
+            obs.finalize(report)
+        return report
 
     def _scan_inputs(self, n_frames: int) -> step_lib.FrameInputs:
         stack = self._stacked(n_frames)

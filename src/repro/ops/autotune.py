@@ -143,6 +143,13 @@ def clear_measurements() -> None:
     _PINNED = False
 
 
+def current_table() -> Optional[Dict[str, Dict[str, float]]]:
+    """The measured/pinned table if one already exists, else None — never
+    triggers the startup micro-benchmark (the repro.obs metrics exporter
+    reads this: observability must not change what a run measures)."""
+    return _TABLE
+
+
 # ---------------------------------------------------------------------------
 # Persisted tables (per-host JSON, keyed by platform + jax version)
 # ---------------------------------------------------------------------------

@@ -109,6 +109,18 @@ class NetworkSim:
         self.t += d
         return d
 
+    def transfer_breakdown(self, n_bytes: int, total_s: float, *,
+                           n_sharers: int = 1) -> Dict[str, float]:
+        """Decompose an already-computed :meth:`transfer_time` result into
+        the handshake/payload parts plus the effective fair-share rate —
+        span annotations for the repro.obs virtual timeline (pure
+        bookkeeping: never re-integrates the trace, so observability adds
+        no timing work)."""
+        payload = max(total_s - self.rtt_s, 1e-12)
+        return {"rtt_s": self.rtt_s, "payload_s": payload,
+                "eff_mbps": n_bytes * 8 / 1e6 / payload,
+                "n_sharers": int(n_sharers)}
+
 
 class SharedUplink(NetworkSim):
     """A cell's uplink shared by N concurrent vehicle streams.

@@ -125,6 +125,12 @@ class RunReport:
     # Per-stream edge device-profile names, shape (S,) (None when the run
     # predates device stamping — exported as an empty CSV column then).
     device: Optional[np.ndarray] = None
+    # Scene frame period — lets the virtual timeline replay the engines'
+    # wall-clock recurrence exactly from the packed arrays.
+    frame_dt: float = 0.1
+    # The run's repro.obs.Observer when observability was enabled (None
+    # otherwise; never exported to CSV).
+    obs: Optional[object] = None
 
     # -- construction ---------------------------------------------------
     @classmethod
@@ -258,6 +264,46 @@ class RunReport:
                        "recall": float(self.recall[s, t]),
                        "scenario": self.scenario, "policy": self.policy,
                        "device": self.stream_device(s)}
+
+    # -- observability views (repro.obs) ---------------------------------
+    def to_trace(self, path=None) -> dict:
+        """The run's virtual timeline as a Chrome trace-event document
+        (Perfetto-loadable), written to ``path`` when given. With an
+        attached observer (ObsConfig(trace=True)) the trace carries
+        uplink, per-GPU cloud and measured host lanes; without one, the
+        per-stream lanes are reconstructed from the packed arrays."""
+        from repro.obs import trace as trace_lib
+        tl = trace_lib.trace_from_report(self, obs=self.obs)
+        return tl.write(path) if path is not None else tl.to_chrome()
+
+    def metrics_registry(self):
+        """The metrics registry this run reported into — or, for an
+        unobserved run, a fresh registry filled from the packed arrays
+        (same numbers, nothing run-external like GPU-pool accounting)."""
+        from repro import obs as obs_lib
+        if self.obs is not None and self.obs.cfg.want_metrics:
+            self.obs.flush_metrics(self)   # idempotent
+            return self.obs.registry
+        reg = obs_lib.MetricsRegistry()
+        obs_lib.fill_report_metrics(reg, self)
+        return reg
+
+    def to_prometheus(self, file=None) -> str:
+        """Prometheus text exposition of this run's metrics."""
+        return self.metrics_registry().to_prometheus(file)
+
+    def to_audit(self, file=None, fmt: Optional[str] = None) -> str:
+        """The scheduler decision audit (one row per stream-frame) as
+        JSONL, or CSV when ``fmt="csv"`` / the path ends in .csv.
+        Requires the run to have been observed with audit on."""
+        if self.obs is None or not len(self.obs.audit):
+            raise ValueError(
+                "no audit log attached to this report; run through an "
+                "engine/Session with obs=ObsConfig(audit=True)")
+        if fmt is None:
+            fmt = "csv" if str(file).endswith(".csv") else "jsonl"
+        return self.obs.audit.to_csv(file) if fmt == "csv" \
+            else self.obs.audit.to_jsonl(file)
 
     def to_csv(self, file=None, header: bool = True) -> str:
         """Write per-frame rows (with scenario/policy provenance columns)

@@ -19,6 +19,7 @@ edge — the Fig. 14 comparison setting).
 """
 from __future__ import annotations
 
+import contextlib
 from typing import List, Optional
 
 import jax
@@ -27,6 +28,7 @@ import numpy as np
 
 from repro.core import metrics, projection, scheduler, transform
 from repro.data import scenes
+from repro.obs import observe as obs_lib
 from repro.runtime import netsim, profiles
 from repro.serving import tape as tape_lib
 from repro.serving.common import (PC_BYTES, RESULT_BYTES, ComponentTimes,
@@ -39,6 +41,9 @@ from repro.serving.common import (PC_BYTES, RESULT_BYTES, ComponentTimes,
 _JIT_TRANSFORM = jax.jit(transform.transform_step,
                          static_argnames=("params",))
 _JIT_ANCHOR = jax.jit(transform.anchor_step, static_argnames=("params",))
+
+# Disabled-observability stand-in for `with obs.measured_span(...)`.
+_NULL_CTX = contextlib.nullcontext()
 
 
 @jax.jit
@@ -63,7 +68,8 @@ class MobyEngine:
                  comp: Optional[ComponentTimes] = None,
                  tape: Optional[tape_lib.FrameTape] = None,
                  backend: Optional[str] = None,
-                 device: str = "jetson_tx2"):
+                 device: str = "jetson_tx2",
+                 obs: Optional[obs_lib.ObsConfig] = None):
         self.cfg = scene_cfg
         self.detector = detector
         self.mode = mode
@@ -102,13 +108,33 @@ class MobyEngine:
         # per benchmark configuration) reuse one compilation cache.
         self._transform_step = _JIT_TRANSFORM
         self._anchor_step = _JIT_ANCHOR
+        # Observability switch (repro.obs); None/all-off keeps every run
+        # hook a single pointer test.
+        self.obs_config = obs
 
     # ------------------------------------------------------------------
-    def _cloud_roundtrip(self) -> float:
+    def _cloud_parts(self) -> tuple:
+        """(upload, cloud inference, download) legs of one cloud trip —
+        split out so the observer can record the legs individually;
+        ``_cloud_roundtrip`` sums them in this exact order, so the summed
+        latency is bitwise what the unsplit version produced."""
         tx = self.net.transfer_time(PC_BYTES)
         infer = profiles.detector_latency(self.detector,
                                           profiles.RTX_2080TI)
         back = self.net.transfer_time(RESULT_BYTES)
+        return tx, infer, back
+
+    def _cloud_roundtrip(self, obs=None, t0: float = 0.0,
+                         record_gpu: bool = False) -> float:
+        tx, infer, back = self._cloud_parts()
+        if obs is not None:
+            bd = self.net.transfer_breakdown(PC_BYTES, tx)
+            obs.record_uplink("up", t0, tx, 1, PC_BYTES, bd["eff_mbps"])
+            if record_gpu:
+                obs.on_cloud_batch(0, t0 + tx, t0 + tx + infer, 1, t0 + tx)
+            bdd = self.net.transfer_breakdown(RESULT_BYTES, back)
+            obs.record_uplink("down", t0 + tx + infer, back, 1,
+                              RESULT_BYTES, bdd["eff_mbps"])
         return tx + infer + back
 
     def _edge_infer(self) -> float:
@@ -119,8 +145,8 @@ class MobyEngine:
                                       self.use_tba, self._charge_fos)
 
     def _observe_telemetry(self,
-                           sstate: scheduler.SchedulerState
-                           ) -> scheduler.SchedulerState:
+                           sstate: scheduler.SchedulerState,
+                           obs=None) -> scheduler.SchedulerState:
         """Per-frame telemetry for cost-aware policies: the bandwidth the
         netsim currently delivers plus modeled edge/offload frame costs
         from the active device profiles."""
@@ -129,6 +155,8 @@ class MobyEngine:
             self.comp, self.detector, bw, self.net.rtt_s, self.use_tba,
             self._charge_fos, onboard_anchors=self.mode == "moby_onboard",
             edge_device=self.profile)
+        if obs is not None:
+            obs.note_telemetry(bw, edge, off)
         return scheduler.observe_telemetry(sstate, bw_mbps=bw,
                                            edge_cost_s=edge,
                                            offload_cost_s=off)
@@ -143,11 +171,15 @@ class MobyEngine:
         return self._run_moby(n_frames)
 
     def _run_baseline(self, n_frames: int) -> RunReport:
+        obs = obs_lib.make_observer(
+            self.obs_config, n_streams=1, devices=(self.profile.name,),
+            policy=self.mode, detector=self.detector,
+            frame_dt=self.frame_dt)
         recs = []
         for t, frame in enumerate(self.stream.frames(n_frames)):
             det, val = scenes.oracle_detect_3d(frame, self.rng, self.noise)
             lat = self._edge_infer() if self.mode == "edge_only" \
-                else self._cloud_roundtrip()
+                else self._cloud_roundtrip(obs, t0=t * self.frame_dt)
             f1, p, r = metrics.f1_score(
                 jnp.asarray(det), jnp.asarray(val),
                 jnp.asarray(frame.gt_boxes),
@@ -156,9 +188,22 @@ class MobyEngine:
                                     lat if self.mode == "edge_only" else 0.0,
                                     float(f1), float(p), float(r)))
             self.net.advance(self.frame_dt)
-        return RunReport.from_records(recs, device=self.profile.name)
+            if obs is not None and obs.cfg.want_audit:
+                # Baselines make no scheduling decision; the audit still
+                # gets its one row per stream-frame (telemetry zeros).
+                obs.audit_frame(t, self.mode, 0.0, 0.0)
+        report = RunReport.from_records(recs, device=self.profile.name)
+        report.frame_dt = self.frame_dt
+        if obs is not None:
+            obs.finalize(report)
+        return report
 
     def _run_moby(self, n_frames: int) -> RunReport:
+        obs = obs_lib.make_observer(
+            self.obs_config, n_streams=1, devices=(self.profile.name,),
+            policy=self.sparams.policy if self.use_fos else "no_fos",
+            detector=self.detector, frame_dt=self.frame_dt)
+        want_audit = obs is not None and obs.cfg.want_audit
         recs: List[FrameRecord] = []
         mstate = transform.init_state(max_tracks=2 * self.cfg.max_obj,
                                       key=jax.random.key(0))
@@ -175,8 +220,12 @@ class MobyEngine:
         for t in range(n_frames):
             tf = self.tape.frame(t) if self.tape is not None else None
             frame = next(frame_iter) if frame_iter is not None else None
+            if want_audit:
+                # Decision-time scheduler state, fetched *before* the step
+                # updates it (one extra (2,) fetch per frame, audit only).
+                pre_tel = np.asarray(scheduler.decision_telemetry(sstate))
             if self.use_fos:
-                sstate = self._observe_telemetry(sstate)
+                sstate = self._observe_telemetry(sstate, obs)
                 actions = scheduler.scheduler_pre(sstate, self.sparams)
             else:
                 actions = scheduler.SchedulerActions(
@@ -193,10 +242,15 @@ class MobyEngine:
                 if self.mode == "moby_onboard":
                     latency = self._edge_infer()
                 else:
-                    latency = self._cloud_roundtrip()
-                mstate, out = self._anchor_step(
-                    mstate, jnp.asarray(det3d), jnp.asarray(val3d),
-                    self.calib, params=self.tparams)
+                    latency = self._cloud_roundtrip(obs, t0=wall,
+                                                    record_gpu=True)
+                with obs.measured_span("moby/anchor_step",
+                                       jit_fn=self._anchor_step,
+                                       frame=t) if obs is not None \
+                        else _NULL_CTX:
+                    mstate, out = self._anchor_step(
+                        mstate, jnp.asarray(det3d), jnp.asarray(val3d),
+                        self.calib, params=self.tparams)
                 # Recomputation: replay buffered frames through the
                 # transformation while waiting — hidden latency, so it does
                 # not add to `latency`; we verify it fits in the wait.
@@ -213,10 +267,14 @@ class MobyEngine:
                     boxes2d, val2d, label_img = scenes.oracle_detect_2d(
                         frame, self.rng)
                     points = frame.points
-                mstate, out = self._transform_step(
-                    mstate, jnp.asarray(points), jnp.asarray(boxes2d),
-                    jnp.asarray(val2d), jnp.asarray(label_img), self.calib,
-                    params=self.tparams)
+                with obs.measured_span("moby/transform_step",
+                                       jit_fn=self._transform_step,
+                                       frame=t) if obs is not None \
+                        else _NULL_CTX:
+                    mstate, out = self._transform_step(
+                        mstate, jnp.asarray(points), jnp.asarray(boxes2d),
+                        jnp.asarray(val2d), jnp.asarray(label_img),
+                        self.calib, params=self.tparams)
                 recompute_buf.append(t)
                 if len(recompute_buf) > 8:
                     recompute_buf.pop(0)
@@ -228,7 +286,7 @@ class MobyEngine:
                 else:
                     tdet, tval = scenes.oracle_detect_3d(frame, self.rng,
                                                          self.noise)
-                arrive = wall + self._cloud_roundtrip()
+                arrive = wall + self._cloud_roundtrip(obs, t0=wall)
                 inflight = (arrive, jnp.asarray(tdet), jnp.asarray(tval))
 
             test_arrived = inflight is not None and wall >= inflight[0]
@@ -245,9 +303,13 @@ class MobyEngine:
             # detection counts driving the on-board time model.
             gt_boxes = tf.gt_boxes if tf is not None else frame.gt_boxes
             gt_vis = tf.gt_visible if tf is not None else frame.visible_gt()
-            stats = np.asarray(_frame_stats(
-                out.boxes3d, out.valid, jnp.asarray(gt_boxes),
-                jnp.asarray(gt_vis), out.det_to_track))
+            with obs.measured_span("moby/frame_stats_fetch",
+                                   jit_fn=_frame_stats,
+                                   frame=t) if obs is not None \
+                    else _NULL_CTX:
+                stats = np.asarray(_frame_stats(
+                    out.boxes3d, out.valid, jnp.asarray(gt_boxes),
+                    jnp.asarray(gt_vis), out.det_to_track))
             f1, p, r = float(stats[0]), float(stats[1]), float(stats[2])
             if is_anchor:
                 onboard = 0.0
@@ -260,6 +322,12 @@ class MobyEngine:
             kind = "anchor" if is_anchor else \
                 ("test" if send_test else "transform")
             recs.append(FrameRecord(t, kind, latency, onboard, f1, p, r))
+            if want_audit:
+                obs.audit_frame(t, kind, pre_tel[0], pre_tel[1])
             wall += max(self.frame_dt, latency if is_anchor else 0.0)
             self.net.advance(self.frame_dt)
-        return RunReport.from_records(recs, device=self.profile.name)
+        report = RunReport.from_records(recs, device=self.profile.name)
+        report.frame_dt = self.frame_dt
+        if obs is not None:
+            obs.finalize(report)
+        return report

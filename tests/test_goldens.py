@@ -1,10 +1,11 @@
 """Golden regression fixtures for the serving surface.
 
-Small seed-pinned ``RunReport.to_csv`` exports of the ``smoke`` and
-``fleet-16-congested`` presets (ref backend, default policy) are checked
-in under ``tests/goldens/``. Any scheduler/profile/engine change that
-moves the modeled numbers shows up as a reviewable golden update instead
-of silent drift:
+Small seed-pinned ``RunReport.to_csv`` exports of the ``smoke``,
+``fleet-16-congested`` and ``fleet-64-mixed`` presets (ref backend,
+default policy), plus a pallas-backend leg of ``smoke`` (interpret mode
+off-TPU), are checked in under ``tests/goldens/``. Any
+scheduler/profile/engine/kernel change that moves the modeled numbers
+shows up as a reviewable golden update instead of silent drift:
 
 * regenerate after an intentional change with
   ``MOBY_REGEN_GOLDENS=1 PYTHONPATH=src python -m pytest
@@ -32,17 +33,28 @@ jax.config.update("jax_platform_name", "cpu")
 GOLDEN_DIR = pathlib.Path(__file__).parent / "goldens"
 DIFF_DIR = pathlib.Path(os.environ.get("GOLDEN_DIFF_DIR", "golden-diff"))
 
-# (preset, frames): small enough to diff by eye, long enough to cross the
-# first test/anchor cycles of every stream.
-GOLDENS = (("smoke", 16), ("fleet-16-congested", 8))
+# (preset, frames, ops backend): small enough to diff by eye, long enough
+# to cross the first test/anchor cycles of every stream. fleet-64-mixed
+# exercises the heterogeneous-device path; the pallas leg guards the
+# kernel backend's serving numbers (interpret mode on CPU).
+GOLDENS = (("smoke", 16, "ref"),
+           ("fleet-16-congested", 8, "ref"),
+           ("fleet-64-mixed", 6, "ref"),
+           ("smoke", 16, "pallas"))
 
 _EXACT = ("stream", "frame", "kind", "scenario", "policy", "device")
 _FLOAT = ("latency_s", "onboard_s", "f1", "precision", "recall")
 
 
-def _generate(preset: str, frames: int) -> str:
-    """The golden contract: seed 0, ref ops backend, preset defaults."""
-    scn = api.scenario(preset, seed=0, backend="ref")
+def _golden_name(preset: str, backend: str) -> str:
+    """ref goldens keep their pre-backend-matrix filenames."""
+    return f"{preset}.csv" if backend == "ref" \
+        else f"{preset}-{backend}.csv"
+
+
+def _generate(preset: str, frames: int, backend: str = "ref") -> str:
+    """The golden contract: seed 0, pinned ops backend, preset defaults."""
+    scn = api.scenario(preset, seed=0, backend=backend)
     return api.Session(scn).run(frames).to_csv()
 
 
@@ -50,11 +62,11 @@ def _rows(text: str):
     return list(csv.DictReader(io.StringIO(text)))
 
 
-@pytest.mark.parametrize("preset,frames", GOLDENS,
-                         ids=[g[0] for g in GOLDENS])
-def test_matches_golden(preset, frames):
-    path = GOLDEN_DIR / f"{preset}.csv"
-    text = _generate(preset, frames)
+@pytest.mark.parametrize("preset,frames,backend", GOLDENS,
+                         ids=[f"{g[0]}-{g[2]}" for g in GOLDENS])
+def test_matches_golden(preset, frames, backend):
+    path = GOLDEN_DIR / _golden_name(preset, backend)
+    text = _generate(preset, frames, backend)
     if os.environ.get("MOBY_REGEN_GOLDENS"):
         GOLDEN_DIR.mkdir(exist_ok=True)
         path.write_text(text)
@@ -77,16 +89,16 @@ def test_matches_golden(preset, frames):
     except AssertionError:
         # Leave the regenerated CSV behind for review (CI uploads it).
         DIFF_DIR.mkdir(exist_ok=True)
-        (DIFF_DIR / f"{preset}.csv").write_text(text)
+        (DIFF_DIR / _golden_name(preset, backend)).write_text(text)
         raise
 
 
 def test_golden_covers_interesting_kinds():
     """The fixtures would not guard the scheduler if they only ever saw
     transform frames."""
-    for preset, _ in GOLDENS:
-        kinds = {r["kind"] for r in _rows((GOLDEN_DIR /
-                                           f"{preset}.csv").read_text())}
+    for preset, _, backend in GOLDENS:
+        path = GOLDEN_DIR / _golden_name(preset, backend)
+        kinds = {r["kind"] for r in _rows(path.read_text())}
         assert "anchor" in kinds and "transform" in kinds, (preset, kinds)
 
 
