@@ -1,0 +1,51 @@
+"""repro.obs — observability for the Moby serving path.
+
+Three parts, all off by default and provably free when off (engines take
+``obs=None`` and guard every hook with one ``if``; no host callbacks, no
+extra device fetches, bitwise-identical outputs — tests/test_obs.py):
+
+* **Metrics** (:mod:`repro.obs.metrics`) — a lightweight registry of
+  counters / gauges / histograms with labels (stream, device, policy,
+  backend, op), populated zero-overhead from the packed (S, F) arrays a
+  run already fetches, with Prometheus text exposition and JSON export.
+* **Virtual-timeline tracing** (:mod:`repro.obs.trace`) — per-stream-frame
+  spans (edge compute, uplink transfer under contention, cloud queue wait,
+  per-GPU batch busy intervals) reconstructed from the modeled-latency
+  state the engines/netsim/cloud pool already compute, exported as Chrome
+  trace-event JSON viewable in Perfetto (``RunReport.to_trace(path)``),
+  plus *measured* wall-clock host spans (``Observer.measured_span``) with
+  per-jitted-step retrace counters so modeled vs. real time compare.
+* **Scheduler decision audit** (:mod:`repro.obs.audit`) — one JSONL/CSV
+  row per stream-frame of every policy input (err_ewma,
+  frames_since_anchor, observed bandwidth, modeled edge/offload costs)
+  and the chosen treatment — the dataset the adaptive-calibration work
+  needs to fit its constants.
+
+Enable from the facade::
+
+    from repro import api, obs
+    sess = api.Session("fleet-16-congested",
+                       obs=obs.ObsConfig(metrics=True, trace=True,
+                                         audit=True))
+    rep = sess.run(16)
+    rep.to_trace("fleet.trace.json")      # load in ui.perfetto.dev
+    rep.to_prometheus("metrics.prom")
+    rep.to_audit("audit.jsonl")
+
+or from the CLI: ``benchmarks/run.py`` / ``benchmarks/sweep.py``
+``--trace`` / ``--metrics`` / ``--audit``.
+"""
+from repro.obs.audit import AUDIT_FIELDS, AuditLog
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               fill_report_metrics, get_registry)
+from repro.obs.observe import (ObsConfig, Observer, export_artifacts,
+                               make_observer)
+from repro.obs.trace import Timeline, trace_from_report
+
+__all__ = [
+    "AUDIT_FIELDS", "AuditLog",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "fill_report_metrics", "get_registry",
+    "ObsConfig", "Observer", "export_artifacts", "make_observer",
+    "Timeline", "trace_from_report",
+]
