@@ -55,6 +55,13 @@ class Scenario:
     # names or a mix spec like {"jetson_tx2": 0.75, "jetson_orin": 0.25}
     # (resolved deterministically — see profiles.resolve_stream_devices).
     device: profiles.DeviceSpec = "jetson_tx2"
+    # Stream-axis device mesh for fleet runs (launch.mesh): None keeps the
+    # single-device dispatch; "auto" sizes a mesh to the host's devices
+    # (largest divisor of n_streams; 1 device -> unsharded, so presets stay
+    # portable); an int asks for exactly that many devices; a ready 1-D
+    # "streams" Mesh is used as-is. Session threads it into FleetEngine;
+    # single-stream engines ignore it.
+    mesh: object = None
     seed: int = 0
 
     def device_profile(self) -> profiles.DeviceProfile:

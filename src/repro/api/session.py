@@ -69,7 +69,10 @@ class Session:
             tparams=scn.tparams, sparams=scn.scheduler_params(),
             seed=scn.seed, comp=scn.comp,
             cloud_cfg=scn.cloud, backend=scn.backend, device=device,
-            obs=self.obs)
+            obs=self.obs,
+            # Lazy S=1 slices (scan-mode baselines) stay unsharded — a
+            # fleet mesh sized for scn.n_streams won't divide 1 stream.
+            mesh=scn.mesh if n_streams == scn.n_streams else None)
 
     @property
     def n_streams(self) -> int:

@@ -28,6 +28,15 @@ Two run modes:
 
 With S=1 both the inputs (serving.tape) and the timing reduce exactly to
 the single-stream ``MobyEngine`` — enforced by tests/test_fleet.py.
+
+Sharded megafleet: ``mesh=`` (None / ``"auto"`` / a device count / a 1-D
+``streams`` Mesh from ``launch.mesh.make_fleet_mesh``) partitions the
+stream axis of every carry/tape buffer across devices. The orchestrated
+step is embarrassingly parallel (contention stays host-global); the scan
+twin runs per shard under ``shard_map`` with the round's sender count
+``psum``-ed so uplink shares and GPU-pool queueing stay fleet-global. A
+1-device mesh reproduces the unsharded path bitwise
+(tests/test_sharded_fleet.py).
 """
 from __future__ import annotations
 
@@ -38,10 +47,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
 from repro.core import projection, scheduler, transform
 from repro.data import scenes
 from repro.fleet import cloud as cloud_lib
 from repro.fleet import step as step_lib
+from repro.launch import mesh as mesh_lib
 from repro.obs import observe as obs_lib
 from repro.runtime import netsim, profiles
 from repro.serving import tape as tape_lib
@@ -85,7 +98,8 @@ class FleetEngine:
                  backend: Optional[str] = None,
                  device: profiles.DeviceSpec = "jetson_tx2",
                  stream_seeds: Optional[Sequence[int]] = None,
-                 obs: Optional[obs_lib.ObsConfig] = None):
+                 obs: Optional[obs_lib.ObsConfig] = None,
+                 mesh=None):
         if mode not in ("moby", "moby_onboard"):
             raise ValueError(f"FleetEngine serves moby modes, got {mode!r}")
         self.cfg = scene_cfg
@@ -145,8 +159,15 @@ class FleetEngine:
         self._given_tapes = list(tapes) if tapes is not None else None
         self._stack: Optional[tape_lib.FrameTape] = None
         self._scan_cache = None
+        # Stream-axis device mesh (launch.mesh): None / "auto" / a device
+        # count / a ready Mesh. Resolved once; both run modes shard every
+        # (S, ...) buffer along it and keep contention fleet-global.
+        self.mesh = mesh_lib.resolve_fleet_mesh(mesh, n_streams)
+        self.n_shards = 1 if self.mesh is None \
+            else int(self.mesh.devices.size)
         self._step = step_lib.make_fleet_step(
-            self.calib, self.tparams, self.sparams, use_fos)
+            self.calib, self.tparams, self.sparams, use_fos,
+            mesh=self.mesh)
 
     # ------------------------------------------------------------------
     def _stacked(self, n_frames: int) -> tape_lib.FrameTape:
@@ -212,7 +233,8 @@ class FleetEngine:
         obs = obs_lib.make_observer(
             self.obs_config, n_streams=s_n, devices=self.stream_devices,
             policy=self.sparams.policy if self.use_fos else "",
-            detector=self.detector, frame_dt=self.frame_dt)
+            detector=self.detector, frame_dt=self.frame_dt,
+            n_shards=self.n_shards)
         want_audit = obs is not None and obs.cfg.want_audit
         self.batcher.sink = obs
         state = self._init_state()
@@ -307,8 +329,14 @@ class FleetEngine:
 
     # ------------------------------------------------------------------
     def _init_state(self) -> step_lib.FleetState:
-        return step_lib.init_fleet_state(self.n_streams, self.cfg.max_obj,
-                                         stream_seeds=self.stream_seeds)
+        state = step_lib.init_fleet_state(self.n_streams, self.cfg.max_obj,
+                                          stream_seeds=self.stream_seeds)
+        if self.mesh is not None:
+            # Place the carry shards before the first dispatch so frame 0
+            # compiles against stream-sharded (not replicated) operands.
+            state = jax.device_put(
+                state, NamedSharding(self.mesh, P("streams")))
+        return state
 
     def run_scan(self, n_frames: int) -> RunReport:
         """Benchmark mode: the whole fleet run is ONE ``lax.scan`` dispatch,
@@ -322,7 +350,8 @@ class FleetEngine:
             self.obs_config, n_streams=self.n_streams,
             devices=self.stream_devices,
             policy=self.sparams.policy if self.use_fos else "",
-            detector=self.detector, frame_dt=self.frame_dt)
+            detector=self.detector, frame_dt=self.frame_dt,
+            n_shards=self.n_shards)
         if obs is not None and obs.cfg.want_audit:
             raise ValueError(
                 "ObsConfig(audit=...) requires the orchestrated "
@@ -345,27 +374,25 @@ class FleetEngine:
 
     def _scan_inputs(self, n_frames: int) -> step_lib.FrameInputs:
         stack = self._stacked(n_frames)
-        # (S, F, ...) -> (F, S, ...) device arrays for scan's leading axis.
+        # (S, F, ...) -> (F, S, ...) device arrays for scan's leading axis;
+        # under a mesh the tape lands stream-sharded (axis 1) up front, so
+        # the scan dispatch never re-lays-out the largest buffers.
+        put = jnp.asarray if self.mesh is None else (
+            lambda a: jax.device_put(
+                a, NamedSharding(self.mesh, P(None, "streams"))))
         return step_lib.FrameInputs(
-            points=jnp.asarray(stack.points.swapaxes(0, 1)),
-            det2d=jnp.asarray(stack.det2d.swapaxes(0, 1)),
-            val2d=jnp.asarray(stack.val2d.swapaxes(0, 1)),
-            label_img=jnp.asarray(stack.label_img.swapaxes(0, 1)),
-            det3d=jnp.asarray(stack.det3d.swapaxes(0, 1)),
-            val3d=jnp.asarray(stack.val3d.swapaxes(0, 1)),
-            gt_boxes=jnp.asarray(stack.gt_boxes.swapaxes(0, 1)),
-            gt_visible=jnp.asarray(stack.gt_visible.swapaxes(0, 1)))
+            points=put(stack.points.swapaxes(0, 1)),
+            det2d=put(stack.det2d.swapaxes(0, 1)),
+            val2d=put(stack.val2d.swapaxes(0, 1)),
+            label_img=put(stack.label_img.swapaxes(0, 1)),
+            det3d=put(stack.det3d.swapaxes(0, 1)),
+            val3d=put(stack.val3d.swapaxes(0, 1)),
+            gt_boxes=put(stack.gt_boxes.swapaxes(0, 1)),
+            gt_visible=put(stack.gt_visible.swapaxes(0, 1)))
 
     def _scan_fn(self):
         if self._scan_cache is not None:
             return self._scan_cache
-        if self.cloud_cfg.window_s is not None:
-            # The scan twin batches whole rounds; silently dropping a
-            # configured batch window would let run()/run_scan() diverge
-            # without warning (ROADMAP: model the window on device).
-            raise ValueError(
-                "CloudBatcherConfig.window_s is not modeled in scan mode; "
-                "use FleetEngine.run() for batch-window configs")
         net = step_lib.ScanNetParams(
             bw_mbps=jnp.asarray(netsim.synthesize_trace(self.trace,
                                                         seed=self.seed),
@@ -376,11 +403,16 @@ class FleetEngine:
             infer_s=self.cloud_cfg.infer_s,
             marginal=self.cloud_cfg.marginal,
             max_batch=self.cloud_cfg.max_batch,
-            n_gpus=self.cloud_cfg.n_gpus)
+            n_gpus=self.cloud_cfg.n_gpus,
+            # Mirrored batch window: round batching already satisfies any
+            # window (a round's requests arrive at one modeled instant, so
+            # a window never splits it — tests/test_cloud_multigpu.py
+            # proves host/scan agreement under a configured window).
+            window_s=self.cloud_cfg.window_s)
         self._scan_cache = step_lib.make_fleet_scan(
             self.n_streams, self.calib, self.tparams, self.sparams,
             self.comp, net, self.use_fos,
             onboard_anchors=self.mode == "moby_onboard",
             edge_infer_s=self._edge_infer(),
-            charge_fos=self._charge_fos)
+            charge_fos=self._charge_fos, mesh=self.mesh)
         return self._scan_cache

@@ -76,9 +76,12 @@ class Observer:
 
     def __init__(self, cfg: ObsConfig, *, n_streams: int = 1,
                  devices=(), policy: str = "", detector: str = "",
-                 frame_dt: float = 0.1):
+                 frame_dt: float = 0.1, n_shards: int = 1):
         self.cfg = cfg
         self.n_streams = n_streams
+        # Stream-axis mesh shards (fleet sharding); > 1 adds per-shard
+        # metric labels so a slow device shows up in the exposition.
+        self.n_shards = n_shards
         self.devices = list(devices) or [""] * n_streams
         self.policy = policy
         self.detector = detector
@@ -223,6 +226,24 @@ class Observer:
             for i, b in enumerate(self.busy_s_g):
                 g.set(b, scenario=report.scenario, policy=report.policy,
                       gpu=i)
+        if self.n_shards > 1 and self.n_streams % self.n_shards == 0:
+            # Sharded fleet: per-shard latency tails + stream counts. The
+            # stream axis shards contiguously (NamedSharding over a 1-D
+            # "streams" mesh), so shard k holds streams [k*S/D, (k+1)*S/D).
+            lat = np.asarray(report.latency_s).reshape(
+                self.n_shards, self.n_streams // self.n_shards, -1)
+            p95 = reg.gauge("moby_shard_p95_latency_seconds",
+                            "p95 modeled frame latency per mesh shard",
+                            labels=("scenario", "policy", "shard"))
+            ns = reg.gauge("moby_shard_streams",
+                           "streams resident on each mesh shard",
+                           labels=("scenario", "policy", "shard"))
+            for k in range(self.n_shards):
+                p95.set(float(np.percentile(lat[k], 95)),
+                        scenario=report.scenario, policy=report.policy,
+                        shard=k)
+                ns.set(lat.shape[1], scenario=report.scenario,
+                       policy=report.policy, shard=k)
         if self.bytes_up or self.bytes_down:
             c = reg.counter("moby_uplink_bytes_total",
                             "modeled bytes over the shared cell",

@@ -147,6 +147,42 @@ def collective_bytes_from_text(hlo_text: str) -> CollectiveStats:
     return collective_bytes(hlo_text.splitlines())
 
 
+# input_output_alias={ {0}: (0, {}, may-alias), {1}: (2, {1}, must-alias) }
+_ALIAS_HDR_RE = re.compile(r"input_output_alias=\{(.*?)\}\s*(?:,|$)")
+_ALIAS_ENTRY_RE = re.compile(r"\{[0-9,\s]*\}:\s*\((\d+),")
+
+
+def input_output_aliases(hlo_text: str) -> list:
+    """Parse the entry computation's ``input_output_alias`` header from
+    compiled HLO text: a list of parameter indices, one per aliased output
+    position (the XLA encoding of jit buffer donation). Empty when nothing
+    was donated."""
+    out = []
+    for line in hlo_text.splitlines():
+        if "input_output_alias=" not in line:
+            continue
+        seg = line.split("input_output_alias=", 1)[1]
+        # The alias map is a brace-balanced {...} blob on the module header.
+        depth = 0
+        for j, ch in enumerate(seg):
+            if ch == "{":
+                depth += 1
+            elif ch == "}":
+                depth -= 1
+                if depth == 0:
+                    seg = seg[:j + 1]
+                    break
+        out.extend(int(m.group(1))
+                   for m in _ALIAS_ENTRY_RE.finditer(seg))
+    return out
+
+
+def donated_params(hlo_text: str) -> set:
+    """Parameter indices whose buffers the compiled executable reuses for
+    outputs (donation landed, memory stays flat in those operands)."""
+    return set(input_output_aliases(hlo_text))
+
+
 def compiled_hlo_text(fn, mesh, in_specs, out_spec, avals) -> str:
     """Optimized HLO text of ``fn`` compiled under ``mesh``.
 

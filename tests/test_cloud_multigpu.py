@@ -124,13 +124,31 @@ class TestPool:
         with pytest.raises(ValueError, match="n_gpus"):
             CloudBatcher(CloudBatcherConfig(infer_s=0.1, n_gpus=0))
 
-    def test_scan_mode_rejects_batch_window(self):
-        """The scan twin batches whole rounds; a configured window must
-        raise rather than silently diverge from run()."""
-        sess = api.Session(api.scenario(
-            "smoke", n_streams=2, cloud=CloudBatcherConfig(window_s=0.05)))
-        with pytest.raises(ValueError, match="window_s"):
-            sess.run(4, scan=True)
+    def test_scan_mode_honors_batch_window(self):
+        """The scan twin now mirrors the batch window: a fleet round's
+        requests arrive at one modeled instant, so a window never splits a
+        round and scan mode agrees with the host batcher — the windowed
+        scan run matches the window-free one bitwise, exactly like
+        CloudBatcher on simultaneous arrivals."""
+        def scan_report(cloud):
+            sess = api.Session(api.scenario("smoke", n_streams=2, seed=0,
+                                            cloud=cloud))
+            r = sess.run(4, scan=True)
+            return np.stack([r.latency_s, r.onboard_s, r.f1])
+
+        base = CloudBatcherConfig()
+        a = scan_report(cloud_lib.replace_config(base, window_s=0.05))
+        b = scan_report(base)
+        assert np.array_equal(a, b)
+        # ... and the host batcher itself treats simultaneous arrivals
+        # identically with and without the window (the agreement contract
+        # the scan approximation leans on).
+        cfg = CloudBatcherConfig(infer_s=0.1, marginal=0.0, max_batch=8)
+        d_win = CloudBatcher(
+            cloud_lib.replace_config(cfg, window_s=0.05)
+        ).submit_batch([0.3, 0.3, 0.3])
+        d_no = CloudBatcher(cfg).submit_batch([0.3, 0.3, 0.3])
+        assert d_win == d_no
 
 
 class TestBatchWindow:
